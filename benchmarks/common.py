@@ -1,0 +1,32 @@
+"""Shared benchmark harness utilities. Every benchmark prints
+``name,us_per_call,derived`` CSV rows (brief requirement) plus a human
+summary to stderr."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Tuple
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Median wall time of fn(*args) in seconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def note(msg: str) -> None:
+    print(f"# {msg}", file=sys.stderr, flush=True)

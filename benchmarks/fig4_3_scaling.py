@@ -1,0 +1,55 @@
+"""Paper Fig 4.3 / Table 4.1 — execution time vs lattice size per engine.
+
+Paper: single-threaded C++ vs Metal vs CUDA (+maxStep variants), L=100..3200
+to 100k MCS; CUDA-maxStep up to 28.4x over single-threaded at L=800. Here:
+the E1 sequential oracle (single-threaded baseline), E2 batched (maxStep
+port) and E3 sublattice (TPU-native) engines on CPU at reduced MCS —
+the SPEEDUP STRUCTURE (parallel engines pulling away with L) is the claim
+under test; absolute times are CPU-bound.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import EscgParams, dominance as dm, simulate
+
+from .common import emit, note, time_fn
+
+MCS = 20
+
+
+def run_engine(engine: str, L: int) -> float:
+    tile = (8, 16) if L >= 16 else (4, 8)
+    p = EscgParams(length=L, height=L, species=3, mobility=1e-4, mcs=MCS,
+                   chunk_mcs=MCS, engine=engine, tile=tile, seed=0,
+                   empty=0.1)
+    # measure a jitted chunk directly (excludes trace/compile, like the
+    # paper excludes process startup)
+    from repro.core.simulation import build_chunk_fn
+    import jax.numpy as jnp
+    from repro.core.lattice import init_grid
+    dom = jnp.asarray(dm.RPS())
+    chunk = build_chunk_fn(p, dom)
+    grid = init_grid(jax.random.PRNGKey(0), L, L, 3, 0.1)
+    key = jax.random.PRNGKey(1)
+    return time_fn(lambda: chunk(grid, key, MCS), warmup=1, iters=2)
+
+
+def run() -> None:
+    note(f"engine scaling, {MCS} MCS per point (paper Fig 4.3/Table 4.1)")
+    base = {}
+    for L in (32, 64, 128, 256):
+        for engine in ("reference", "batched", "sublattice"):
+            if engine == "reference" and L > 128:
+                continue               # the paper's baseline also tops out
+            t = run_engine(engine, L)
+            upd = MCS * L * L / t
+            base[(engine, L)] = t
+            speedup = (base[("reference", L)] / t
+                       if ("reference", L) in base else float("nan"))
+            emit(f"scaling_{engine}_L{L}", t,
+                 f"{upd / 1e6:.2f} Mupd/s; vs_seq {speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

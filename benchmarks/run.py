@@ -1,0 +1,30 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV rows. Set BENCH_FAST=0 for the full
+(slower) settings.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig4_1_prng, fig4_2_batch_sweep, fig4_3_scaling,
+                   fig4_4_variance, fig4_9_park_heatmap, roofline_table,
+                   table4_2_park_stats, trials_throughput, zhong_density)
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    for mod in (fig4_1_prng, fig4_2_batch_sweep, fig4_3_scaling,
+                fig4_4_variance, zhong_density, fig4_9_park_heatmap,
+                table4_2_park_stats, trials_throughput, roofline_table):
+        print(f"# ===== {mod.__name__} =====", file=sys.stderr, flush=True)
+        try:
+            mod.run()
+        except Exception as e:                          # noqa: BLE001
+            print(f"{mod.__name__},ERROR,{e}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

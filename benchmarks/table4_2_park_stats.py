@@ -1,0 +1,28 @@
+"""Paper Table 4.2 — std of species-5 extinction probability across system
+sizes and MCS horizons (the dissertation's multimodality audit of Park et
+al.). Reduced: L in {16, 24}, MCS in {0, 200, 600}, 6 IID trials."""
+from __future__ import annotations
+
+import time
+
+from repro.core.park import species5_extinction_std
+
+from .common import emit, note
+
+LS = (16, 24)
+MCS = (0, 200, 600)
+
+
+def run() -> None:
+    note("species-5 extinction std over (L, MCS) (paper Table 4.2)")
+    t0 = time.perf_counter()
+    table = species5_extinction_std(LS, MCS, alpha=0.15, beta=0.75,
+                                    gamma=1.0, n_trials=6)
+    dt = time.perf_counter() - t0
+    for i, m in enumerate(MCS):
+        row = " ".join(f"L{l}:{table[i, j]:.3f}" for j, l in enumerate(LS))
+        emit(f"park_std_mcs{m}", dt / len(MCS), row)
+
+
+if __name__ == "__main__":
+    run()

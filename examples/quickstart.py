@@ -1,0 +1,47 @@
+"""Quickstart: Reichenbach–Mobilia–Frey rock-paper-scissors spirals
+(paper Fig 1.1) in ~30 lines of public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs a 128x128 three-species ESCG at low mobility, prints density traces
+and an ASCII snapshot; saves the lattice + densities under out/quickstart.
+"""
+import numpy as np
+
+from repro.core import EscgParams, dominance, io, simulate
+
+GLYPHS = " RPS45678"
+
+
+def ascii_lattice(grid: np.ndarray, step: int = 4) -> str:
+    return "\n".join("".join(GLYPHS[v] for v in row[::step])
+                     for row in grid[::step])
+
+
+def main() -> None:
+    params = EscgParams(
+        length=128, height=128, species=3,
+        mobility=3e-5,                  # below the RMF threshold -> spirals
+        empty=0.1, mcs=400, chunk_mcs=100,
+        engine="batched", seed=0, out_dir="out/quickstart")
+    dom = dominance.RPS()
+
+    def report(mcs_done, grid, counts):
+        dens = counts[-1] / counts[-1].sum()
+        print(f"MCS {mcs_done:5d}  empty={dens[0]:.3f} "
+              f"R={dens[1]:.3f} P={dens[2]:.3f} S={dens[3]:.3f}")
+
+    result = simulate(params, dom, hooks=[report])
+    print("\nFinal lattice (1:4 downsample):")
+    print(ascii_lattice(result.grid))
+    io.save_state(params.out_dir, params, result.grid,
+                  result.mcs_completed, dom)
+    io.export_densities_csv(f"{params.out_dir}/densities.csv",
+                            result.densities)
+    print(f"\nsaved state + densities to {params.out_dir}/")
+    assert (result.densities[-1][1:] > 0).all(), "coexistence expected"
+    print("all three species coexist — RMF low-mobility regime replicated")
+
+
+if __name__ == "__main__":
+    main()

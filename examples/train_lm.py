@@ -1,0 +1,41 @@
+"""Train a small LM end-to-end with the full production path: synthetic
+pipeline -> sharding-ready train step -> AdamW -> checkpoint/restart loop.
+
+Default is a ~13M-parameter granite-family model that trains in a few
+minutes on this CPU container and demonstrably learns the synthetic
+structure (loss drops well below ln(vocab)). For the ~100M variant:
+
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+(larger presets are CPU-hours; the assigned full configs are exercised via
+the dry-run instead).
+"""
+import argparse
+
+from repro.launch import train as train_cli
+import sys
+
+
+PRESETS = {
+    "13m": ["--d_model", "256", "--layers", "8", "--heads", "8",
+            "--vocab", "4096", "--batch", "8", "--seq", "128"],
+    "100m": ["--d_model", "640", "--layers", "12", "--heads", "10",
+             "--vocab", "16384", "--batch", "8", "--seq", "256"],
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="13m")
+    ap.add_argument("--steps", type=int, default=300)
+    args, rest = ap.parse_known_args()
+
+    sys.argv = (["train"] + ["--arch", "granite-3-8b", "--reduced"]
+                + PRESETS[args.preset]
+                + ["--steps", str(args.steps), "--ckpt_dir",
+                   "out/train_lm", "--ckpt_every", "100"] + rest)
+    train_cli.main()
+
+
+if __name__ == "__main__":
+    main()

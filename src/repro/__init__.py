@@ -1,0 +1,3 @@
+"""repro — GPU-paper reproduction: Evolutionary Spatial Cyclic Games as a
+multi-pod JAX framework (see DESIGN.md)."""
+__version__ = "1.0.0"

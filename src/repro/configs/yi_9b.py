@@ -1,0 +1,8 @@
+"""yi-9b — llama-arch GQA LM [arXiv:2403.04652; hf].
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b", family="dense", n_layers=48, d_model=4096,
+    n_heads=32, n_kv=4, head_dim=128, d_ff=11008, vocab=64000,
+    param_dtype="bfloat16")

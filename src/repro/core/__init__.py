@@ -1,0 +1,11 @@
+"""Core ESCG engine — the paper's contribution as a composable JAX module."""
+from . import batched, dominance, io, lattice, metrics, park, reference
+from . import rng, rules, simulation, sublattice
+from .params import ENGINES, EscgParams
+from .simulation import SimResult, run_trials, simulate
+
+__all__ = [
+    "EscgParams", "ENGINES", "SimResult", "simulate", "run_trials",
+    "batched", "dominance", "io", "lattice", "metrics", "park",
+    "reference", "rng", "rules", "simulation", "sublattice",
+]

@@ -1,0 +1,59 @@
+"""E2: the batched "maxStep" engine — the faithful TPU port of the paper's
+atomics-arbitrated parallel elementary steps (paper §2.6, §3.2.2, §3.3).
+
+CUDA resolves contested cells with hardware atomics ("only one write will
+successfully complete for each contested memory address"); TPUs have no
+atomics, so we arbitrate identically but deterministically with a
+**scatter-min of proposal index over both touched cells**: the earliest
+proposal touching a cell wins it; a proposal survives only if it won *both*
+its cells. Survivors are provably pairwise disjoint and are applied with one
+masked scatter. Losers are dropped — the same fate the paper assigns to
+overwritten atomic updates — and the drop count is reported so MCS accounting
+can be audited (paper counts every attempt; so do we).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import lattice
+from .rng import ProposalBatch
+from .rules import apply_pair
+
+
+def run_proposals(grid: jax.Array, batch: ProposalBatch, t_eps: float,
+                  t_eps_mu: float, dom: jax.Array, flux: bool = True
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Apply one arbitration window of proposals in parallel.
+
+    Returns (grid, n_kept). Bit-identical to
+    ``reference.run_proposals(..., drop_conflicts=True)``.
+    """
+    h, w = grid.shape
+    n = h * w
+    g = grid.reshape(-1)
+    i = batch.cell
+    ni = lattice.neighbor_index(batch.cell, batch.dirn, h, w, flux)
+    b = i.shape[0]
+    order = jnp.arange(b, dtype=jnp.int32)
+
+    # --- arbitration: first proposal to touch a cell owns it ---
+    winner = jnp.full((n,), b, dtype=jnp.int32)
+    winner = winner.at[i].min(order)
+    winner = winner.at[ni].min(order)
+    keep = (winner[i] == order) & (winner[ni] == order)
+
+    # --- rule application on the ORIGINAL grid (survivors are disjoint) ---
+    s = g[i]
+    nb = g[ni]
+    ns, nn = apply_pair(s, nb, batch.u_act, batch.u_dom, t_eps, t_eps_mu, dom)
+
+    # --- masked scatter: dropped proposals write to a shadow slot ---
+    gpad = jnp.concatenate([g, jnp.zeros((1,), g.dtype)])
+    ti = jnp.where(keep, i, n)
+    tn = jnp.where(keep, ni, n)
+    gpad = gpad.at[ti].set(jnp.where(keep, ns, 0))
+    gpad = gpad.at[tn].set(jnp.where(keep, nn, 0))
+    return gpad[:n].reshape(h, w), jnp.sum(keep.astype(jnp.int32))

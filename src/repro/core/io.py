@@ -1,0 +1,84 @@
+"""State import/export — paper parity (grid.csv / params.csv / dominance.csv,
+--save / --resume, §3.2.2) plus a binary .npz fast path used by the runtime
+checkpointing layer."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import dominance as dom_mod
+from .params import EscgParams
+
+
+def export_grid_csv(path: str, grid: np.ndarray, mcs: int) -> None:
+    """Paper format: one CSV row per lattice row; final line = last MCS."""
+    grid = np.asarray(grid)
+    with open(path, "w") as f:
+        for row in grid:
+            f.write(",".join(str(int(v)) for v in row) + "\n")
+        f.write(f"{int(mcs)}\n")
+
+
+def import_grid_csv(path: str) -> Tuple[np.ndarray, int]:
+    with open(path) as f:
+        lines = [l.strip() for l in f if l.strip()]
+    mcs = int(lines[-1])
+    grid = np.array([[int(v) for v in l.split(",")] for l in lines[:-1]],
+                    dtype=np.int32)
+    return grid, mcs
+
+
+def save_state(out_dir: str, params: EscgParams, grid: np.ndarray, mcs: int,
+               dom: np.ndarray, key: Optional[np.ndarray] = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    export_grid_csv(os.path.join(out_dir, "grid.csv"), grid, mcs)
+    with open(os.path.join(out_dir, "params.csv"), "w") as f:
+        f.write(params.to_json())
+    with open(os.path.join(out_dir, "dominance.csv"), "w") as f:
+        f.write(dom_mod.to_csv(dom))
+    # binary fast path (atomic)
+    tmp = os.path.join(out_dir, ".state.npz.tmp")
+    blob = {"grid": np.asarray(grid, np.int32), "mcs": np.int64(mcs),
+            "dom": np.asarray(dom, np.float32)}
+    if key is not None:
+        blob["key"] = np.asarray(key)
+    with open(tmp, "wb") as f:
+        np.savez(f, **blob)
+    os.replace(tmp, os.path.join(out_dir, "state.npz"))
+
+
+def load_state(out_dir: str):
+    """Returns (params, grid, mcs, dom, key|None). Prefers the npz fast path,
+    falls back to the paper CSV format."""
+    with open(os.path.join(out_dir, "params.csv")) as f:
+        params = EscgParams.from_json(f.read())
+    npz_path = os.path.join(out_dir, "state.npz")
+    if os.path.exists(npz_path):
+        z = np.load(npz_path)
+        key = z["key"] if "key" in z.files else None
+        return params, z["grid"], int(z["mcs"]), z["dom"], key
+    grid, mcs = import_grid_csv(os.path.join(out_dir, "grid.csv"))
+    with open(os.path.join(out_dir, "dominance.csv")) as f:
+        dom = dom_mod.from_csv(f.read())
+    return params, grid, mcs, dom, None
+
+
+def export_densities_csv(path: str, density_history: np.ndarray) -> None:
+    hist = np.asarray(density_history)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        s = hist.shape[1] - 1
+        f.write("mcs,empty," + ",".join(f"s{i}" for i in range(1, s + 1))
+                + "\n")
+        for t, row in enumerate(hist):
+            f.write(f"{t}," + ",".join(f"{v:.6f}" for v in row) + "\n")
+
+
+def save_snapshot(out_dir: str, grid: np.ndarray, mcs: int) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"snapshot_{mcs:08d}.npy")
+    np.save(path, np.asarray(grid, np.int32))
+    return path

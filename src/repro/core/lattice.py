@@ -1,0 +1,67 @@
+"""Lattice construction and neighbour indexing (paper §3.1.1).
+
+The grid is a (H, W) int32 array; 0 = empty, 1..S = species. Like the paper we
+keep a flat-index view for proposal streams: ``index = row * W + col``.
+Boundary handling: ``flux=True`` -> periodic wrap (modular arithmetic, the
+paper's default); ``flux=False`` -> reflect (clamp to edge; an out-of-bounds
+neighbour maps back to the nearest edge cell).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Direction tables. First 4 entries = von Neumann (up, down, left, right,
+# matching the paper's ordering); entries 4..7 add the Moore diagonals.
+DIRS = np.array(
+    [(-1, 0), (1, 0), (0, -1), (0, 1),
+     (-1, -1), (-1, 1), (1, -1), (1, 1)], dtype=np.int32)
+
+
+def init_grid(key: jax.Array, height: int, width: int, species: int,
+              empty_prob: float = 0.0, dtype=jnp.int32) -> jax.Array:
+    """Uniform random initialization (paper §3.1.1): each cell is empty with
+    probability ``empty_prob`` else uniform over species 1..S."""
+    k1, k2 = jax.random.split(key)
+    occupied = jax.random.uniform(k1, (height, width)) >= empty_prob
+    labels = jax.random.randint(k2, (height, width), 1, species + 1,
+                                dtype=jnp.int32)
+    return jnp.where(occupied, labels, 0).astype(dtype)
+
+
+def neighbor_rc(row: jax.Array, col: jax.Array, direction: jax.Array,
+                height: int, width: int, flux: bool
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Neighbour (row, col) for a direction id, under the boundary rule."""
+    dirs = jnp.asarray(DIRS)
+    dr = dirs[direction, 0]
+    dc = dirs[direction, 1]
+    nr, nc = row + dr, col + dc
+    if flux:
+        nr = jnp.mod(nr + height, height)
+        nc = jnp.mod(nc + width, width)
+    else:
+        nr = jnp.clip(nr, 0, height - 1)
+        nc = jnp.clip(nc, 0, width - 1)
+    return nr, nc
+
+
+def neighbor_index(cell: jax.Array, direction: jax.Array, height: int,
+                   width: int, flux: bool) -> jax.Array:
+    """Flat-index neighbour lookup (paper's modular-arithmetic formulas)."""
+    row, col = cell // width, cell % width
+    nr, nc = neighbor_rc(row, col, direction, height, width, flux)
+    return nr * width + nc
+
+
+def counts(grid: jax.Array, species: int) -> jax.Array:
+    """Population counts per label 0..S (0 = empties). Device-resident."""
+    return jnp.bincount(grid.reshape(-1).astype(jnp.int32),
+                        length=species + 1)
+
+
+def densities(grid: jax.Array, species: int) -> jax.Array:
+    return counts(grid, species) / grid.size

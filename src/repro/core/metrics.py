@@ -1,0 +1,40 @@
+"""Densities, stasis detection and survival statistics (paper §3.2.2, §4.3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def counts(grid: jax.Array, species: int) -> jax.Array:
+    return jnp.bincount(grid.reshape(-1).astype(jnp.int32),
+                        length=species + 1)
+
+
+def densities(grid: jax.Array, species: int) -> jax.Array:
+    return counts(grid, species) / grid.size
+
+
+def alive_species(cnt: jax.Array) -> jax.Array:
+    """Number of species (excluding empties) with non-zero population."""
+    return jnp.sum((cnt[1:] > 0).astype(jnp.int32))
+
+
+def stasis(cnt: jax.Array) -> jax.Array:
+    """Paper §3.2.2: stable when at most one species remains active (even if
+    several non-competing species could coexist, migration keeps the grid
+    changing, so stasis is strictly monoculture-or-dead)."""
+    return alive_species(cnt) <= 1
+
+
+def survivors(grid: jax.Array, species: int) -> jax.Array:
+    """Bool[S] survival mask, 0-indexed by species-1 (Park experiments)."""
+    return counts(grid, species)[1:] > 0
+
+
+def first_extinction_mcs(density_history: np.ndarray, sp: int) -> int:
+    """First MCS at which species ``sp`` (1-indexed) has zero density;
+    -1 if it never goes extinct. ``density_history``: (T, S+1)."""
+    col = np.asarray(density_history)[:, sp]
+    idx = np.nonzero(col == 0.0)[0]
+    return int(idx[0]) if idx.size else -1

@@ -1,0 +1,162 @@
+"""Simulation parameters — CLI-parity with the paper's Tables 3.1 and 3.2.
+
+The paper exposes a single configurable simulator; we mirror every flag
+(``--length``, ``--height``, ``--mcs``, ``--neighbourhood``, ``--mobility``,
+``--species``, ``--flux``, ``--empty``, ``--save``, ``--dominance``,
+``--resume``, ``--numRandoms``, ``--maxStep``) plus engine-selection knobs
+introduced by the TPU adaptation (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+# Update engines (DESIGN.md §2).
+ENGINES = ("reference", "batched", "sublattice", "pallas",
+           "pallas_fused")
+
+
+@dataclass(frozen=True)
+class EscgParams:
+    # ---- paper Table 3.1 ----
+    length: int = 200              # lattice width  W
+    height: int = 200              # lattice height H
+    mcs: int = 100_000             # Monte Carlo step limit
+    neighbourhood: int = 4         # 4 = von Neumann, 8 = Moore
+    print_frequency: int = 200     # density print interval (MCS)
+    mobility: float = 3e-5         # M: typical area explored per unit time
+    species: int = 3
+    flux: bool = True              # periodic (wrap) boundary; False = reflect
+    empty: float = 0.0             # initial empty-cell probability
+    save: bool = False             # export snapshots/state
+    # ---- paper Table 3.2 (GPU extensions) ----
+    resume: bool = False
+    num_randoms: int = 0           # proposals per round; 0 -> N (one MCS/round)
+    max_step: bool = False         # multiple MCS per round (maxStep mode)
+    # ---- action rates (paper §3.1.1) ----
+    mu: float = 1.0                # interaction
+    sigma: float = 1.0             # reproduction
+    epsilon: Optional[float] = None  # migration; default 2*M*N (paper)
+    # ---- TPU adaptation knobs ----
+    engine: str = "batched"        # one of ENGINES
+    cell_dtype: str = "int32"      # int8 quarters lattice HBM traffic
+    tile: Tuple[int, int] = (8, 32)   # sublattice tile (th, tw)
+    seed: int = 0
+    chunk_mcs: int = 100           # MCS per jitted chunk (device-resident loop)
+    out_dir: str = "escg_out"
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_cells(self) -> int:
+        return self.length * self.height
+
+    @property
+    def eps(self) -> float:
+        if self.epsilon is not None:
+            return float(self.epsilon)
+        return 2.0 * self.mobility * self.n_cells
+
+    def action_thresholds(self) -> Tuple[float, float]:
+        """Normalized cumulative thresholds (t_eps, t_eps_mu) on u ~ U[0,1).
+
+        u <  t_eps          -> migration
+        u <  t_eps_mu       -> interaction
+        else                -> reproduction
+        (paper Algorithm 3.2 ordering)
+        """
+        total = self.mu + self.sigma + self.eps
+        if total <= 0:
+            raise ValueError("mu + sigma + epsilon must be positive")
+        return self.eps / total, (self.eps + self.mu) / total
+
+    @property
+    def proposals_per_round(self) -> int:
+        n = self.num_randoms if self.num_randoms > 0 else self.n_cells
+        if not self.max_step:
+            n = min(n, self.n_cells)
+        # paper: numRandoms = (numRandoms / N) * N  (align with whole MCS)
+        n = max(self.n_cells, (n // self.n_cells) * self.n_cells)
+        return n
+
+    @property
+    def mcs_per_round(self) -> int:
+        return self.proposals_per_round // self.n_cells
+
+    def validate(self) -> "EscgParams":
+        if self.neighbourhood not in (4, 8):
+            raise ValueError("neighbourhood must be 4 or 8")
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}")
+        if self.species < 1:
+            raise ValueError("species >= 1")
+        if not (0.0 <= self.empty <= 1.0):
+            raise ValueError("empty in [0,1]")
+        if self.length < 3 or self.height < 3:
+            raise ValueError("lattice must be at least 3x3")
+        if self.cell_dtype not in ("int8", "int16", "int32"):
+            raise ValueError("cell_dtype must be int8/int16/int32")
+        if self.cell_dtype == "int8" and self.species > 127:
+            raise ValueError("int8 lattice supports <= 127 species")
+        if self.engine in ("sublattice", "pallas", "pallas_fused"):
+            th, tw = self.tile
+            if th < 3 or tw < 3:
+                raise ValueError("tile dims must be >= 3 (need interior)")
+            if self.height % th or self.length % tw:
+                raise ValueError(
+                    f"tile {self.tile} must divide lattice "
+                    f"{self.height}x{self.length}")
+        return self
+
+    # ------------------------------ io -------------------------------- #
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_json(s: str) -> "EscgParams":
+        d = json.loads(s)
+        d["tile"] = tuple(d["tile"])
+        return EscgParams(**d)
+
+    def replace(self, **kw) -> "EscgParams":
+        return dataclasses.replace(self, **kw)
+
+
+def add_cli_args(p: argparse.ArgumentParser) -> None:
+    b = lambda s: s.lower() in ("1", "true", "yes")  # noqa: E731
+    p.add_argument("--length", type=int, default=200)
+    p.add_argument("--height", type=int, default=200)
+    p.add_argument("--mcs", type=int, default=100_000)
+    p.add_argument("--neighbourhood", type=int, default=4, choices=(4, 8))
+    p.add_argument("--printFrequency", dest="print_frequency", type=int,
+                   default=200)
+    p.add_argument("--mobility", type=float, default=3e-5)
+    p.add_argument("--species", type=int, default=3)
+    p.add_argument("--flux", type=b, default=True)
+    p.add_argument("--empty", type=float, default=0.0)
+    p.add_argument("--save", type=b, default=False)
+    p.add_argument("--dominance", type=str, default="",
+                   help="path to dominance .csv (paper --dominance)")
+    p.add_argument("--resume", type=b, default=False)
+    p.add_argument("--numRandoms", dest="num_randoms", type=int, default=0)
+    p.add_argument("--maxStep", dest="max_step", type=b, default=False)
+    p.add_argument("--mu", type=float, default=1.0)
+    p.add_argument("--sigma", type=float, default=1.0)
+    p.add_argument("--epsilon", type=float, default=None)
+    p.add_argument("--engine", type=str, default="batched", choices=ENGINES)
+    p.add_argument("--cellDtype", dest="cell_dtype", type=str,
+                   default="int32", choices=("int8", "int16", "int32"))
+    p.add_argument("--tile", type=int, nargs=2, default=(8, 32))
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--chunkMcs", dest="chunk_mcs", type=int, default=100)
+    p.add_argument("--outDir", dest="out_dir", type=str, default="escg_out")
+
+
+def params_from_args(args: argparse.Namespace) -> EscgParams:
+    fields = {f.name for f in dataclasses.fields(EscgParams)}
+    kw = {k: v for k, v in vars(args).items() if k in fields and v is not None}
+    if "tile" in kw:
+        kw["tile"] = tuple(kw["tile"])
+    return EscgParams(**kw).validate()

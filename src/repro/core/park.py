@@ -1,0 +1,70 @@
+"""Park, Chen & Szolnoki (2023) eight-species alliance model (paper §4.3.2)
+plus the mobility extension of the Cliff & Sinadjan companion paper (App. C).
+
+Park et al.: no mobility (epsilon = 0), probabilistic dominance rates
+(alpha, beta, gamma), L x L lattice, terminate after L^2 MCS, survival
+statistics over many IID runs. The companion paper's contribution is a single
+knob: mobility > 0, which we expose directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from .dominance import park_alliance_network
+from .params import EscgParams
+from .simulation import run_trials
+
+
+def park_params(L: int = 100, mcs: Optional[int] = None,
+                mobility: float = 0.0, engine: str = "batched",
+                seed: int = 0, **kw) -> EscgParams:
+    """Paper/Park defaults: S=8, no empties... Park's model has no empty
+    sites initially; interactions produce empties which reproduction refills.
+    Terminates after L^2 MCS (paper Fig 4.9/4.10)."""
+    return EscgParams(
+        length=L, height=L, species=8, empty=0.0,
+        mcs=int(mcs if mcs is not None else L * L),
+        mobility=mobility,
+        epsilon=None if mobility > 0 else 0.0,
+        mu=1.0, sigma=1.0, engine=engine, seed=seed, **kw)
+
+
+def survival_probabilities(alpha: float, beta: float, gamma: float = 1.0,
+                           L: int = 100, n_trials: int = 20,
+                           mcs: Optional[int] = None, mobility: float = 0.0,
+                           key: Optional[jax.Array] = None,
+                           engine: str = "batched"
+                           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (per-species survival probability [8], n-survivors histogram
+    [9]) over vmapped IID trials — the quantity behind paper Figs 4.9-4.13."""
+    params = park_params(L=L, mcs=mcs, mobility=mobility, engine=engine)
+    dom = park_alliance_network(alpha, beta, gamma)
+    surv = run_trials(params, dom, n_trials, key=key)     # (trials, 8) bool
+    p_survive = surv.mean(axis=0)
+    n_surv = surv.sum(axis=1)
+    hist = np.bincount(n_surv, minlength=9)[:9] / n_trials
+    return p_survive, hist
+
+
+def species5_extinction_std(L_values, mcs_values, alpha: float = 0.15,
+                            beta: float = 0.75, gamma: float = 1.0,
+                            n_trials: int = 20, seed: int = 0,
+                            engine: str = "batched") -> np.ndarray:
+    """Replication of paper Table 4.2: std of species-5 extinction indicator
+    across IID trials, for each (MCS, L). Returns (len(mcs), len(L))."""
+    out = np.zeros((len(mcs_values), len(L_values)))
+    dom = park_alliance_network(alpha, beta, gamma)
+    for j, L in enumerate(L_values):
+        for i, mcs in enumerate(mcs_values):
+            if mcs == 0:
+                out[i, j] = 0.0
+                continue
+            params = park_params(L=L, mcs=mcs, engine=engine, seed=seed)
+            surv = run_trials(params, dom, n_trials,
+                              key=jax.random.PRNGKey(seed + 17 * j + i))
+            extinct5 = 1.0 - surv[:, 4].astype(np.float64)  # species 5
+            out[i, j] = float(extinct5.std())
+    return out

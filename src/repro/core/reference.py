@@ -1,0 +1,55 @@
+"""E1: exact sequential engine (paper Algorithm 3.2/3.3 semantics).
+
+``lax.scan`` over elementary steps — the single-threaded baseline the paper
+benchmarks against, and the oracle every parallel engine is validated on.
+
+``drop_conflicts=True`` switches to the *sequential shadow* of the batched
+engine: a proposal is skipped (not applied) when any earlier proposal in the
+same arbitration window touched either of its cells. With matching windows
+this reproduces ``batched.run_proposals`` bit-for-bit (tests rely on it).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import lattice
+from .rng import ProposalBatch
+from .rules import apply_pair
+
+
+def run_proposals(grid: jax.Array, batch: ProposalBatch, t_eps: float,
+                  t_eps_mu: float, dom: jax.Array, flux: bool = True,
+                  drop_conflicts: bool = False
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Apply a proposal stream strictly in order. Returns (grid, n_applied)."""
+    h, w = grid.shape
+    g0 = grid.reshape(-1)
+    ni = lattice.neighbor_index(batch.cell, batch.dirn, h, w, flux)
+
+    def body(carry, p):
+        g, touched = carry
+        i, n_i, ua, ud = p
+        s = g[i]
+        n = g[n_i]
+        ns, nn = apply_pair(s, n, ua, ud, t_eps, t_eps_mu, dom)
+        if drop_conflicts:
+            keep = ~(touched[i] | touched[n_i])
+            ns = jnp.where(keep, ns, s)
+            nn = jnp.where(keep, nn, n)
+            # NB: cells count as touched even for dropped proposals — this is
+            # exactly the scatter-min arbitration rule of the batched engine.
+            touched = touched.at[i].set(True).at[n_i].set(True)
+        else:
+            keep = jnp.bool_(True)
+        g = g.at[i].set(ns)
+        g = g.at[n_i].set(nn)
+        return (g, touched), keep
+
+    touched0 = jnp.zeros_like(g0, dtype=jnp.bool_)
+    (g, _), kept = lax.scan(
+        body, (g0, touched0), (batch.cell, ni, batch.u_act, batch.u_dom))
+    return g.reshape(h, w), jnp.sum(kept.astype(jnp.int32))

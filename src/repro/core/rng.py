@@ -1,0 +1,64 @@
+"""Batched pseudo-random proposal streams (paper T1: §2.6, §3.2.1).
+
+The paper's key PRNG insight — generate large batches of (cell, direction,
+action) draws in parallel on-device and consume them by indexed lookup — maps
+directly onto counter-based PRNGs: generation is embarrassingly parallel and
+needs no per-thread Mersenne-Twister state, seed hashing, or burn-in (the
+paper's Fig 3.4 pathology cannot occur by construction; see DESIGN.md §2).
+
+Default backend: JAX threefry. A Pallas Philox-4x32 kernel
+(``repro.kernels.philox``) provides the explicitly-tiled variant used in the
+PRNG benchmark (paper Fig 4.1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ProposalBatch(NamedTuple):
+    """One round of elementary-step proposals (device-resident)."""
+    cell: jax.Array    # int32[B]  flat cell index in [0, N)
+    dirn: jax.Array    # int32[B]  direction id in [0, nbhd)
+    u_act: jax.Array   # float32[B] action draw in [0, 1)
+    u_dom: jax.Array   # float32[B] dominance draw in [0, 1)
+
+
+def proposal_batch(key: jax.Array, n_proposals: int, n_cells: int,
+                   neighbourhood: int) -> ProposalBatch:
+    """Draw one batch of proposals (the paper's refreshRandomNumbers)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return ProposalBatch(
+        cell=jax.random.randint(k1, (n_proposals,), 0, n_cells,
+                                dtype=jnp.int32),
+        dirn=jax.random.randint(k2, (n_proposals,), 0, neighbourhood,
+                                dtype=jnp.int32),
+        u_act=jax.random.uniform(k3, (n_proposals,), dtype=jnp.float32),
+        u_dom=jax.random.uniform(k4, (n_proposals,), dtype=jnp.float32),
+    )
+
+
+def tile_proposal_batch(key: jax.Array, n_tiles: int, k_per_tile: int,
+                        interior: int, neighbourhood: int) -> ProposalBatch:
+    """Proposals for the sublattice engine: per-tile interior cell ids.
+
+    ``cell`` here is an index into the (th-2)x(tw-2) interior window of each
+    tile (the kernel adds the +1 inset); shape (n_tiles, K).
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    shape = (n_tiles, k_per_tile)
+    return ProposalBatch(
+        cell=jax.random.randint(k1, shape, 0, interior, dtype=jnp.int32),
+        dirn=jax.random.randint(k2, shape, 0, neighbourhood, dtype=jnp.int32),
+        u_act=jax.random.uniform(k3, shape, dtype=jnp.float32),
+        u_dom=jax.random.uniform(k4, shape, dtype=jnp.float32),
+    )
+
+
+def round_shift(key: jax.Array, th: int, tw: int) -> jax.Array:
+    """Uniform torus shift (dy, dx) in [0,th) x [0,tw) for one sublattice
+    round (Shim-Amar randomized sublattice origin)."""
+    return jax.random.randint(key, (2,), 0, jnp.array([th, tw]),
+                              dtype=jnp.int32)

@@ -1,0 +1,113 @@
+"""Multi-device ESCG: 2-D spatial domain decomposition (DESIGN.md §5).
+
+The lattice shards as P('data', 'model') — a (16 x 16) pod holds a 256-tile
+device grid. One round:
+
+  1. ``jnp.roll`` by the random sublattice shift at the pjit level — GSPMD
+     moves only the wrapped slivers between neighbouring devices
+     (collective-permute of O(shift x perimeter) bytes, NOT a halo exchange
+     per elementary step);
+  2. ``shard_map`` local update: every device runs the same per-tile
+     sequential sweeps as the single-device engine on its local block.
+     Because proposals are restricted to tile interiors and device blocks
+     are unions of tiles, no device ever writes another device's cells —
+     the engine is communication-free inside a round by construction;
+  3. roll back (optional — densities are translation-invariant, so
+     production keeps the accumulated shift and only unrolls for
+     snapshots; see §Perf).
+
+Bit-exactness: a sharded round equals the single-device
+``sublattice.run_round`` with identical proposals (tests/test_sharded.py
+runs this equality on a subprocess-faked 16-device mesh).
+
+The 'pod' axis carries vmapped IID trials — the paper's statistics problem
+(2000 independent runs, §4.3.2) sharded across pods.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .rng import ProposalBatch
+from .sublattice import from_tiles, tile_update, to_tiles
+
+
+def sharded_run_round(grid: jax.Array, props: ProposalBatch,
+                      shift: jax.Array, tile_shape: Tuple[int, int],
+                      t_eps: float, t_eps_mu: float, dom: jax.Array,
+                      mesh: Mesh, row_axis: str = "data",
+                      col_axis: str = "model",
+                      roll_back: bool = True) -> jax.Array:
+    """One shifted-window round on a (H, W) lattice sharded over
+    (row_axis, col_axis). props arrays: (T, K) in global raster tile order.
+    """
+    h, w = grid.shape
+    th, tw = tile_shape
+    gh, gw = h // th, w // tw
+    dr = mesh.shape[row_axis]
+    dc = mesh.shape[col_axis]
+    if (h // dr) % th or (w // dc) % tw:
+        raise ValueError("device blocks must be unions of tiles")
+
+    grid_spec = P(row_axis, col_axis)
+    prop_spec = P(row_axis, col_axis, None)
+
+    def reshape_props(a):
+        return a.reshape(gh, gw, -1)
+
+    def local_update(gl, cell, dirn, ua, ud):
+        tiles = to_tiles(gl, th, tw)
+        k = cell.shape[-1]
+        upd = jax.vmap(lambda t, c, d, a, u: tile_update(
+            t, ProposalBatch(c, d, a, u), t_eps, t_eps_mu, dom))
+        tiles = upd(tiles, cell.reshape(-1, k), dirn.reshape(-1, k),
+                    ua.reshape(-1, k), ud.reshape(-1, k))
+        return from_tiles(tiles, gl.shape[0], gl.shape[1])
+
+    update = shard_map(
+        local_update, mesh=mesh,
+        in_specs=(grid_spec, prop_spec, prop_spec, prop_spec, prop_spec),
+        out_specs=grid_spec)
+
+    g = jnp.roll(grid, (-shift[0], -shift[1]), (0, 1))
+    g = update(g, reshape_props(props.cell), reshape_props(props.dirn),
+               reshape_props(props.u_act), reshape_props(props.u_dom))
+    if roll_back:
+        g = jnp.roll(g, (shift[0], shift[1]), (0, 1))
+    return g
+
+
+def make_sharded_simulation(params, dom, mesh: Mesh,
+                            row_axis: str = "data",
+                            col_axis: str = "model"):
+    """Returns (grid_sharding, jitted one_mcs(grid, key) -> grid) for the
+    production mesh. Mirrors simulation.build_mcs_fn for the sharded case."""
+    from . import rng as rngm
+
+    p = params.validate()
+    if p.engine not in ("sublattice", "pallas"):
+        raise ValueError("sharded ESCG uses the sublattice engine")
+    t_eps, t_eps_mu = p.action_thresholds()
+    th, tw = p.tile
+    n_tiles = (p.height // th) * (p.length // tw)
+    k_per = max(1, -(-p.n_cells // n_tiles))
+    interior = (th - 2) * (tw - 2)
+    dom_j = jnp.asarray(dom, jnp.float32)
+    grid_sh = NamedSharding(mesh, P(row_axis, col_axis))
+
+    @jax.jit
+    def one_mcs(grid, key):
+        kp, ks = jax.random.split(key)
+        props = rngm.tile_proposal_batch(kp, n_tiles, k_per, interior,
+                                         p.neighbourhood)
+        shift = rngm.round_shift(ks, th, tw)
+        return sharded_run_round(grid, props, shift, (th, tw), t_eps,
+                                 t_eps_mu, dom_j, mesh, row_axis, col_axis)
+
+    return grid_sh, one_mcs

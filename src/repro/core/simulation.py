@@ -1,0 +1,240 @@
+"""MCS driver (paper Algorithms 3.3 / 3.5 / 3.6 / 3.7, unified).
+
+The paper's lesson (maxStep, §4.2.4): keep everything device-resident and
+batch many Monte-Carlo steps per launch. Here a *chunk* of ``chunk_mcs`` MCS
+runs inside one jitted ``lax.scan``; the host only sees per-MCS population
+counts, performs the stasis early-exit (paper §3.2.2), and fires snapshot /
+checkpoint hooks between chunks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import batched as batched_mod
+from . import dominance as dom_mod
+from . import lattice, metrics
+from . import reference as reference_mod
+from . import sublattice as sublattice_mod
+from .params import EscgParams
+from .rng import proposal_batch, round_shift, tile_proposal_batch
+
+
+@dataclass
+class SimResult:
+    grid: np.ndarray               # final lattice (H, W)
+    densities: np.ndarray          # (mcs_recorded + 1, S + 1), row 0 = init
+    mcs_completed: int
+    stasis_mcs: int                # -1 if never reached stasis
+    kept_fraction: float           # applied / attempted proposals (E2 audit)
+
+
+def _pick_sub_batches(n: int, want: int = 8) -> int:
+    for d in (want, 4, 2, 1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def build_mcs_fn(params: EscgParams, dom: jax.Array
+                 ) -> Callable[[jax.Array, jax.Array],
+                               Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Returns one_mcs(grid, key) -> (grid, kept, attempts) for the engine."""
+    p = params
+    t_eps, t_eps_mu = p.action_thresholds()
+    n = p.n_cells
+    h, w = p.height, p.length
+
+    if p.engine == "reference":
+        def one_mcs(grid, key):
+            batch = proposal_batch(key, n, n, p.neighbourhood)
+            grid, kept = reference_mod.run_proposals(
+                grid, batch, t_eps, t_eps_mu, dom, p.flux)
+            return grid, kept, jnp.int32(n)
+        return one_mcs
+
+    if p.engine == "batched":
+        n_sub = _pick_sub_batches(n)
+        b_sub = n // n_sub
+
+        def one_mcs(grid, key):
+            def body(carry, k):
+                g, kept = carry
+                batch = proposal_batch(k, b_sub, n, p.neighbourhood)
+                g, k2 = batched_mod.run_proposals(
+                    g, batch, t_eps, t_eps_mu, dom, p.flux)
+                return (g, kept + k2), None
+            keys = jax.random.split(key, n_sub)
+            (grid, kept), _ = jax.lax.scan(body, (grid, jnp.int32(0)), keys)
+            return grid, kept, jnp.int32(n)
+        return one_mcs
+
+    if p.engine == "pallas_fused":
+        if not p.flux:
+            raise ValueError("pallas_fused requires periodic boundaries")
+        th, tw = p.tile
+        n_tiles = (h // th) * (w // tw)
+        k_per_tile = max(1, math.ceil(n / n_tiles))
+        from ..kernels import ops as kernel_ops  # lazy: avoid cycles
+
+        def one_mcs(grid, key):
+            # per-MCS Philox key = the raw PRNG key words; round_idx = 0
+            seed = jax.random.key_data(key).astype(jnp.uint32)[-2:]
+            shift = round_shift(jax.random.fold_in(key, 1), th, tw)
+            grid = kernel_ops.escg_round_fused(
+                grid, seed, jnp.uint32(0), shift, dom, p.tile, k_per_tile,
+                t_eps, t_eps_mu, p.neighbourhood, roll_back=False)
+            attempts = jnp.int32(n_tiles * k_per_tile)
+            return grid, attempts, attempts
+        return one_mcs
+
+    if p.engine in ("sublattice", "pallas"):
+        if not p.flux:
+            raise ValueError("sublattice/pallas engines require flux "
+                             "(periodic) boundaries; use reference/batched")
+        th, tw = p.tile
+        n_tiles = (h // th) * (w // tw)
+        k_per_tile = max(1, math.ceil(n / n_tiles))
+        interior = (th - 2) * (tw - 2)
+
+        if p.engine == "pallas":
+            from ..kernels import ops as kernel_ops  # lazy: avoid cycles
+            run_round = partial(kernel_ops.escg_round, tile_shape=p.tile,
+                                t_eps=t_eps, t_eps_mu=t_eps_mu,
+                                roll_back=False)
+        else:
+            run_round = partial(sublattice_mod.run_round, tile_shape=p.tile,
+                                t_eps=t_eps, t_eps_mu=t_eps_mu,
+                                roll_back=False)
+
+        # §Perf H3 iter-1: never roll back. Densities / survival statistics
+        # are translation-invariant on the torus, so the lattice frame is
+        # allowed to drift by the accumulated shift (composition of uniform
+        # shifts stays uniform); simulate() unrolls once at the end for
+        # snapshots. Halves the roll traffic per round.
+        def one_mcs(grid, key):
+            kp, ks = jax.random.split(key)
+            props = tile_proposal_batch(kp, n_tiles, k_per_tile, interior,
+                                        p.neighbourhood)
+            shift = round_shift(ks, th, tw)
+            grid = run_round(grid, props, shift, dom=dom)
+            attempts = jnp.int32(n_tiles * k_per_tile)
+            return grid, attempts, attempts
+        return one_mcs
+
+    raise ValueError(f"unknown engine {p.engine}")
+
+
+def build_chunk_fn(params: EscgParams, dom: jax.Array):
+    """chunk(grid, key, n_mcs<static>) -> (grid, key, counts[n,S+1], kept,
+    attempts); jit-compiled, fully device-resident."""
+    one_mcs = build_mcs_fn(params, dom)
+    s = params.species
+
+    @partial(jax.jit, static_argnames=("n_mcs",))
+    def chunk(grid, key, n_mcs: int):
+        def body(carry, _):
+            g, k, kept, att = carry
+            k, k1 = jax.random.split(k)
+            g, k2, a2 = one_mcs(g, k1)
+            cnt = metrics.counts(g, s)
+            return (g, k, kept + k2, att + a2), cnt
+        (grid, key, kept, att), cnts = jax.lax.scan(
+            body, (grid, key, jnp.int32(0), jnp.int32(0)), length=n_mcs)
+        return grid, key, cnts, kept, att
+
+    return chunk
+
+
+def simulate(params: EscgParams,
+             dom: Optional[np.ndarray] = None,
+             grid0: Optional[jax.Array] = None,
+             key: Optional[jax.Array] = None,
+             hooks: Sequence[Callable[[int, jax.Array, np.ndarray], None]] = (),
+             stop_on_stasis: bool = True) -> SimResult:
+    """Run the full simulation (paper Algorithm 3.3 control flow)."""
+    p = params.validate()
+    if dom is None:
+        dom = dom_mod.circulant(p.species)
+    dom_j = jnp.asarray(dom, jnp.float32)
+    if key is None:
+        key = jax.random.PRNGKey(p.seed)
+    cell_dt = jnp.dtype(p.cell_dtype)
+    if grid0 is None:
+        key, k0 = jax.random.split(key)
+        grid0 = lattice.init_grid(k0, p.height, p.length, p.species, p.empty,
+                                  dtype=cell_dt)
+    grid = jnp.asarray(grid0, cell_dt)
+
+    chunk_fn = build_chunk_fn(p, dom_j)
+    n = p.n_cells
+    hist = [np.asarray(metrics.counts(grid, p.species))]
+    mcs_done, stasis_mcs = 0, -1
+    kept_total, att_total = 0, 0
+
+    while mcs_done < p.mcs:
+        n_mcs = min(p.chunk_mcs, p.mcs - mcs_done)
+        grid, key, cnts, kept, att = chunk_fn(grid, key, n_mcs)
+        cnts_h = np.asarray(cnts)
+        hist.append(cnts_h)
+        kept_total += int(kept)
+        att_total += int(att)
+        mcs_done += n_mcs
+        alive = (cnts_h[:, 1:] > 0).sum(axis=1)
+        if stop_on_stasis and stasis_mcs < 0 and np.any(alive <= 1):
+            stasis_mcs = mcs_done - n_mcs + int(np.argmax(alive <= 1)) + 1
+        for hook in hooks:
+            hook(mcs_done, grid, cnts_h)
+        if stop_on_stasis and stasis_mcs >= 0:
+            break
+
+    densities = np.concatenate([hist[0][None, :]] + hist[1:], axis=0) / n
+    return SimResult(grid=np.asarray(grid), densities=densities,
+                     mcs_completed=mcs_done, stasis_mcs=stasis_mcs,
+                     kept_fraction=(kept_total / att_total) if att_total else 1.0)
+
+
+# ----------------------- vmapped IID trial runner ------------------------ #
+
+def run_trials(params: EscgParams, dom: Optional[np.ndarray], n_trials: int,
+               key: Optional[jax.Array] = None,
+               n_mcs: Optional[int] = None) -> np.ndarray:
+    """Run ``n_trials`` IID simulations *vectorized with vmap* and return the
+    final survival mask, shape (n_trials, S) bool.
+
+    The paper runs IID trials serially (2000 runs for Park Fig 5!); batching
+    trials through vmap is the single biggest beyond-paper throughput lever on
+    accelerators and is what the pod axis carries at multi-pod scale.
+    """
+    p = params.validate()
+    if dom is None:
+        dom = dom_mod.circulant(p.species)
+    dom_j = jnp.asarray(dom, jnp.float32)
+    if key is None:
+        key = jax.random.PRNGKey(p.seed)
+    n_mcs = int(n_mcs if n_mcs is not None else p.mcs)
+    one_mcs = build_mcs_fn(p, dom_j)
+
+    kg, kr = jax.random.split(key)
+    grids = jax.vmap(lambda k: lattice.init_grid(
+        k, p.height, p.length, p.species, p.empty))(
+            jax.random.split(kg, n_trials))
+    keys = jax.random.split(kr, n_trials)
+
+    @jax.jit
+    def run_one(grid, key):
+        def body(carry, _):
+            g, k = carry
+            k, k1 = jax.random.split(k)
+            g, _, _ = one_mcs(g, k1)
+            return (g, k), None
+        (grid, _), _ = jax.lax.scan(body, (grid, key), length=n_mcs)
+        return metrics.survivors(grid, p.species)
+
+    return np.asarray(jax.vmap(run_one)(grids, keys))

@@ -1,0 +1,1 @@
+from .synthetic import SyntheticTokens, batch_for_model

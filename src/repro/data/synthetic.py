@@ -1,0 +1,77 @@
+"""Deterministic synthetic data pipeline.
+
+Serves the LM training examples/benchmarks: an infinite, seeded,
+shard-aware token stream with next-token labels. Each (host, step) pair
+derives its batch from a counter-based key, so restarts reproduce the same
+stream with no data service (the same counter-PRNG philosophy as the ESCG
+random streams, T1).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SyntheticTokens:
+    """Markov-ish token stream: mixture of n-gram structure + noise so the
+    CE loss has learnable signal (pure uniform tokens would be flat)."""
+
+    def __init__(self, vocab: int, seq_len: int, batch: int, seed: int = 0,
+                 structure: float = 0.8):
+        self.vocab = vocab
+        self.seq_len = seq_len
+        self.batch = batch
+        self.seed = seed
+        self.structure = structure
+
+    PERIOD = 16
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        b, s, v = self.batch, self.seq_len, self.vocab
+        # structured component: periodic sequences (token_t = token_{t-P})
+        # — learnable by induction heads within a few hundred steps, unlike
+        # modular-arithmetic maps which need grokking-scale training
+        p = min(self.PERIOD, s)
+        pattern = jax.random.randint(k1, (b, p), 0, v, dtype=jnp.int32)
+        reps = -(-s // p)
+        periodic = jnp.tile(pattern, (1, reps))[:, :s]
+        noise = jax.random.randint(k2, (b, s), 0, v, dtype=jnp.int32)
+        use_structure = jax.random.uniform(k3, (b, s)) < self.structure
+        tokens = jnp.where(use_structure, periodic, noise).astype(jnp.int32)
+        labels = jnp.concatenate(
+            [tokens[:, 1:],
+             jax.random.randint(k4, (b, 1), 0, v, dtype=jnp.int32)], axis=1)
+        return {"tokens": tokens, "labels": labels}
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def batch_for_model(model, shape, step: int, seed: int = 0,
+                    batch_override: Optional[int] = None):
+    """Concrete batch matching model.input_specs (incl. stub modalities)."""
+    specs = model.input_specs(shape, batch_override)
+    b = batch_override or shape.global_batch
+    out = {}
+    if "tokens" in specs and shape.kind == "train":
+        st = SyntheticTokens(model.cfg.vocab, shape.seq_len, b, seed)
+        out.update(st.batch_at(step))
+    elif "tokens" in specs:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        out["tokens"] = jax.random.randint(
+            key, specs["tokens"].shape, 0, model.cfg.vocab, dtype=jnp.int32)
+    for name in ("frames", "img_embeds"):
+        if name in specs:
+            key = jax.random.fold_in(jax.random.PRNGKey(seed + 99), step)
+            out[name] = (jax.random.normal(key, specs[name].shape,
+                                           jnp.float32)
+                         / np.sqrt(specs[name].shape[-1]))
+    return out

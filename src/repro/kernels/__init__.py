@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spots: the sublattice ESCG
+update (maxStep), counter-based PRNG (T1), and density reduction. Each kernel
+has a pure-jnp oracle in ref.py; ops.py holds the jitted wrappers."""
+from . import density, escg_update, ops, philox, ref

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the sublattice ESCG round (DESIGN.md §2, E3).
+
+One program = one (th, tw) lattice tile resident in VMEM. The program plays
+its K pre-generated proposals **sequentially** (``fori_loop`` with dynamic
+scalar load/store) — race-free by construction — while the Pallas grid runs
+all tiles in parallel across cores. This is the TPU-native replacement for
+the paper's CUDA atomics: spatial disjointness instead of per-address
+arbitration.
+
+Layout notes (TPU target):
+  * grid tile (th, tw): tw = 128 aligns with the lane dimension; th is a
+    multiple of 8 for int32 sublane packing. Other shapes work via compiler
+    padding (and in interpret mode) but 8x128 multiples are the fast path.
+  * proposals arrive as (T, K) int32/float32 arrays (the paper's
+    pre-generated random-number buffers, T1) and are consumed by lookup.
+  * the dominance matrix (S+1, S+1) and direction table (8, 2) are tiny and
+    replicated to every program.
+
+Oracle: ``repro.core.sublattice.tile_update`` (pure jnp). The kernel must
+match it bit-for-bit; see tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _kernel(cell_ref, dirn_ref, uact_ref, udom_ref, dom_ref, dirs_ref,
+            grid_ref, out_ref, *, t_eps: float, t_eps_mu: float, k: int,
+            iw: int):
+    out_ref[...] = grid_ref[...]
+
+    def body(j, _):
+        cell = pl.load(cell_ref, (0, pl.ds(j, 1)))[0]
+        dirn = pl.load(dirn_ref, (0, pl.ds(j, 1)))[0]
+        ua = pl.load(uact_ref, (0, pl.ds(j, 1)))[0]
+        ud = pl.load(udom_ref, (0, pl.ds(j, 1)))[0]
+
+        r = 1 + cell // iw
+        c = 1 + cell % iw
+        d = pl.load(dirs_ref, (pl.ds(dirn, 1), slice(None)))[0]
+        nr = r + d[0]
+        nc = c + d[1]
+
+        s = pl.load(out_ref, (pl.ds(r, 1), pl.ds(c, 1)))[0, 0]
+        n = pl.load(out_ref, (pl.ds(nr, 1), pl.ds(nc, 1)))[0, 0]
+        cell_dt = s.dtype
+        s = s.astype(jnp.int32)
+        n = n.astype(jnp.int32)
+
+        # --- inline pure pair rule (repro.core.rules.apply_pair) ---
+        same = s == n
+        migrate = ua < t_eps
+        interact = (ua >= t_eps) & (ua < t_eps_mu)
+        reproduce = ua >= t_eps_mu
+        p1 = pl.load(dom_ref, (pl.ds(s, 1), pl.ds(n, 1)))[0, 0]
+        p2 = pl.load(dom_ref, (pl.ds(n, 1), pl.ds(s, 1)))[0, 0]
+        kill_n = interact & (ud < p1)
+        kill_s = interact & ~kill_n & (ud < p1 + p2)
+        rep_to_n = reproduce & (n == 0)
+        rep_to_s = reproduce & (s == 0)
+        zero = jnp.int32(0)
+        new_s = jnp.where(migrate, n,
+                jnp.where(kill_s, zero,
+                jnp.where(rep_to_s, n, s)))
+        new_n = jnp.where(migrate, s,
+                jnp.where(kill_n, zero,
+                jnp.where(rep_to_n, s, n)))
+        new_s = jnp.where(same, s, new_s)
+        new_n = jnp.where(same, n, new_n)
+
+        pl.store(out_ref, (pl.ds(r, 1), pl.ds(c, 1)),
+                 new_s.astype(cell_dt).reshape(1, 1))
+        pl.store(out_ref, (pl.ds(nr, 1), pl.ds(nc, 1)),
+                 new_n.astype(cell_dt).reshape(1, 1))
+        return 0
+
+    lax.fori_loop(0, k, body, 0)
+
+
+def escg_tile_round(grid: jax.Array, cell: jax.Array, dirn: jax.Array,
+                    u_act: jax.Array, u_dom: jax.Array, dom: jax.Array,
+                    dirs: jax.Array, tile_shape: Tuple[int, int],
+                    t_eps: float, t_eps_mu: float,
+                    interpret: bool = False) -> jax.Array:
+    """Run one sublattice round over an already-shifted (H, W) grid.
+
+    cell/dirn/u_act/u_dom: (T, K) proposal arrays in raster tile order.
+    dirs: (8, 2) int32 direction table. Returns the updated grid.
+    """
+    h, w = grid.shape
+    th, tw = tile_shape
+    gh, gw = h // th, w // tw
+    t, k = cell.shape
+    assert t == gh * gw, (t, gh, gw)
+    iw = tw - 2
+
+    kern = functools.partial(_kernel, t_eps=float(t_eps),
+                             t_eps_mu=float(t_eps_mu), k=int(k), iw=int(iw))
+    prop_spec = pl.BlockSpec((1, k), lambda i, j: (i * gw + j, 0))
+    full = lambda a: pl.BlockSpec(a.shape, lambda i, j: (0,) * a.ndim)
+
+    return pl.pallas_call(
+        kern,
+        grid=(gh, gw),
+        in_specs=[prop_spec, prop_spec, prop_spec, prop_spec,
+                  full(dom), full(dirs),
+                  pl.BlockSpec((th, tw), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((th, tw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), grid.dtype),
+        interpret=interpret,
+    )(cell, dirn, u_act, u_dom, dom, dirs, grid)

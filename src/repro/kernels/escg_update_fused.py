@@ -1,0 +1,130 @@
+"""Fused-PRNG sublattice kernel (§Perf H3 iter-2, beyond-paper).
+
+The paper pre-generates random-number buffers in device memory and tunes
+their size (--numRandoms, Fig 4.2). This kernel ELIMINATES that traffic and
+the tuning knob: each tile derives its proposals from Philox-4x32 counters
+*inside* the kernel, in VMEM, at the moment of consumption — 16 bytes per
+elementary update of HBM traffic (4 random words) drop to zero; what
+remains is the grid itself.
+
+Counter layout: c0 = tile_id * K + j (proposal index), c1 = round index,
+c2 = c3 = 0; key = two words derived from the simulation PRNG key per MCS.
+Uniform ints via modulus (the paper's own technique, §3.2.1 — the bias at
+32 bits is < 2^-22 for any lattice tile).
+
+Oracle: host-side Philox (kernels.ref.philox4x32_ref) feeding the standard
+tile oracle — bit-exact match required (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .philox import philox_rounds
+
+
+def _kernel(seed_ref, round_ref, dom_ref, dirs_ref, grid_ref, out_ref, *,
+            t_eps: float, t_eps_mu: float, k: int, iw: int, interior: int,
+            nbhd: int, gw: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    tile_id = (i * gw + j).astype(jnp.uint32)
+
+    # --- derive this tile's K proposals from counters (vectorized) ---
+    idx = tile_id * jnp.uint32(k) + lax.iota(jnp.uint32, k)
+    c1 = jnp.full((k,), round_ref[0, 0], jnp.uint32)
+    zeros = jnp.zeros((k,), jnp.uint32)
+    x0, x1, x2, x3 = philox_rounds(idx, c1, zeros, zeros,
+                                   seed_ref[0, 0], seed_ref[0, 1])
+    cells = (x0 % jnp.uint32(interior)).astype(jnp.int32)
+    dirns = (x1 % jnp.uint32(nbhd)).astype(jnp.int32)
+    uact = (x2 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
+    udom = (x3 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
+
+    out_ref[...] = grid_ref[...]
+
+    def body(jj, _):
+        cell = lax.dynamic_index_in_dim(cells, jj, keepdims=False)
+        dirn = lax.dynamic_index_in_dim(dirns, jj, keepdims=False)
+        ua = lax.dynamic_index_in_dim(uact, jj, keepdims=False)
+        ud = lax.dynamic_index_in_dim(udom, jj, keepdims=False)
+
+        r = 1 + cell // iw
+        c = 1 + cell % iw
+        d = pl.load(dirs_ref, (pl.ds(dirn, 1), slice(None)))[0]
+        nr = r + d[0]
+        nc = c + d[1]
+
+        s = pl.load(out_ref, (pl.ds(r, 1), pl.ds(c, 1)))[0, 0]
+        n = pl.load(out_ref, (pl.ds(nr, 1), pl.ds(nc, 1)))[0, 0]
+        cell_dt = s.dtype
+        s = s.astype(jnp.int32)
+        n = n.astype(jnp.int32)
+
+        same = s == n
+        migrate = ua < t_eps
+        interact = (ua >= t_eps) & (ua < t_eps_mu)
+        reproduce = ua >= t_eps_mu
+        p1 = pl.load(dom_ref, (pl.ds(s, 1), pl.ds(n, 1)))[0, 0]
+        p2 = pl.load(dom_ref, (pl.ds(n, 1), pl.ds(s, 1)))[0, 0]
+        kill_n = interact & (ud < p1)
+        kill_s = interact & ~kill_n & (ud < p1 + p2)
+        rep_to_n = reproduce & (n == 0)
+        rep_to_s = reproduce & (s == 0)
+        zero = jnp.int32(0)
+        new_s = jnp.where(migrate, n,
+                jnp.where(kill_s, zero,
+                jnp.where(rep_to_s, n, s)))
+        new_n = jnp.where(migrate, s,
+                jnp.where(kill_n, zero,
+                jnp.where(rep_to_n, s, n)))
+        new_s = jnp.where(same, s, new_s)
+        new_n = jnp.where(same, n, new_n)
+
+        pl.store(out_ref, (pl.ds(r, 1), pl.ds(c, 1)),
+                 new_s.astype(cell_dt).reshape(1, 1))
+        pl.store(out_ref, (pl.ds(nr, 1), pl.ds(nc, 1)),
+                 new_n.astype(cell_dt).reshape(1, 1))
+        return 0
+
+    lax.fori_loop(0, k, body, 0)
+
+
+def escg_tile_round_fused(grid: jax.Array, seed: jax.Array,
+                          round_idx: jax.Array, dom: jax.Array,
+                          dirs: jax.Array, tile_shape: Tuple[int, int],
+                          k_per_tile: int, t_eps: float, t_eps_mu: float,
+                          neighbourhood: int = 4,
+                          interpret: bool = False) -> jax.Array:
+    """One fused round over an already-shifted (H, W) grid.
+
+    seed: (2,) uint32 key words; round_idx: scalar uint32.
+    """
+    h, w = grid.shape
+    th, tw = tile_shape
+    gh, gw = h // th, w // tw
+    iw = tw - 2
+    interior = (th - 2) * (tw - 2)
+
+    kern = functools.partial(
+        _kernel, t_eps=float(t_eps), t_eps_mu=float(t_eps_mu),
+        k=int(k_per_tile), iw=int(iw), interior=int(interior),
+        nbhd=int(neighbourhood), gw=int(gw))
+    seed_arr = seed.reshape(1, 2).astype(jnp.uint32)
+    round_arr = jnp.reshape(round_idx, (1, 1)).astype(jnp.uint32)
+    full = lambda a: pl.BlockSpec(a.shape, lambda i, j: (0,) * a.ndim)
+
+    return pl.pallas_call(
+        kern,
+        grid=(gh, gw),
+        in_specs=[full(seed_arr), full(round_arr), full(dom), full(dirs),
+                  pl.BlockSpec((th, tw), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((th, tw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), grid.dtype),
+        interpret=interpret,
+    )(seed_arr, round_arr, dom, dirs, grid)

@@ -1,0 +1,100 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU and are validated via the interpreter per the brief).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.lattice import DIRS
+from ..core.rng import ProposalBatch
+from . import density as density_kernel
+from . import escg_update as escg_kernel
+from . import escg_update_fused as escg_fused_kernel
+from . import philox as philox_kernel
+
+
+def _default_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tile_shape", "t_eps",
+                                             "t_eps_mu", "interpret",
+                                             "roll_back"))
+def _escg_round_impl(grid, cell, dirn, u_act, u_dom, shift, dom,
+                     tile_shape, t_eps, t_eps_mu, interpret, roll_back):
+    dirs = jnp.asarray(DIRS, jnp.int32)
+    g = jnp.roll(grid, (-shift[0], -shift[1]), (0, 1))
+    g = escg_kernel.escg_tile_round(
+        g, cell, dirn, u_act, u_dom, jnp.asarray(dom, jnp.float32), dirs,
+        tile_shape, t_eps, t_eps_mu, interpret=interpret)
+    if roll_back:
+        g = jnp.roll(g, (shift[0], shift[1]), (0, 1))
+    return g
+
+
+def escg_round(grid: jax.Array, props: ProposalBatch, shift: jax.Array,
+               dom: jax.Array, tile_shape: Tuple[int, int], t_eps: float,
+               t_eps_mu: float, interpret: Optional[bool] = None,
+               roll_back: bool = True) -> jax.Array:
+    """Drop-in Pallas replacement for core.sublattice.run_round."""
+    return _escg_round_impl(grid, props.cell, props.dirn, props.u_act,
+                            props.u_dom, shift, dom, tile_shape,
+                            float(t_eps), float(t_eps_mu),
+                            _default_interpret(interpret), roll_back)
+
+
+def philox_bits(n: int, seed: Tuple[int, int] = (0, 0), stream: int = 0,
+                block: int = 1024,
+                interpret: Optional[bool] = None) -> jax.Array:
+    return philox_kernel.philox_bits(n, seed, stream, block,
+                                     _default_interpret(interpret))
+
+
+def philox_uniform(n: int, seed: Tuple[int, int] = (0, 0), stream: int = 0,
+                   block: int = 1024,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    return philox_kernel.philox_uniform(n, seed, stream, block,
+                                        _default_interpret(interpret))
+
+
+def density_counts(grid: jax.Array, species: int,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    return density_kernel.density_counts(
+        grid, species, interpret=_default_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_shape", "k_per_tile",
+                                             "t_eps", "t_eps_mu",
+                                             "neighbourhood", "interpret",
+                                             "roll_back"))
+def _escg_round_fused_impl(grid, seed, round_idx, shift, dom, tile_shape,
+                           k_per_tile, t_eps, t_eps_mu, neighbourhood,
+                           interpret, roll_back):
+    dirs = jnp.asarray(DIRS, jnp.int32)
+    g = jnp.roll(grid, (-shift[0], -shift[1]), (0, 1))
+    g = escg_fused_kernel.escg_tile_round_fused(
+        g, seed, round_idx, jnp.asarray(dom, jnp.float32), dirs,
+        tile_shape, k_per_tile, t_eps, t_eps_mu, neighbourhood,
+        interpret=interpret)
+    if roll_back:
+        g = jnp.roll(g, (shift[0], shift[1]), (0, 1))
+    return g
+
+
+def escg_round_fused(grid, seed, round_idx, shift, dom, tile_shape,
+                     k_per_tile, t_eps, t_eps_mu, neighbourhood=4,
+                     interpret=None, roll_back=True):
+    """Fused-PRNG sublattice round: proposals derived in-kernel from Philox
+    counters (zero proposal HBM traffic; see escg_update_fused)."""
+    return _escg_round_fused_impl(grid, seed, round_idx, shift, dom,
+                                  tile_shape, k_per_tile, float(t_eps),
+                                  float(t_eps_mu), neighbourhood,
+                                  _default_interpret(interpret), roll_back)

@@ -1,0 +1,88 @@
+"""Pure-jnp / numpy oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.rng import ProposalBatch
+from ..core.sublattice import from_tiles, tile_update, to_tiles
+
+PHILOX_M0 = np.uint64(0xD2511F53)
+PHILOX_M1 = np.uint64(0xCD9E8D57)
+PHILOX_W0 = np.uint32(0x9E3779B9)
+PHILOX_W1 = np.uint32(0xBB67AE85)
+
+
+def escg_tile_round_ref(grid: jax.Array, cell, dirn, u_act, u_dom, dom,
+                        tile_shape: Tuple[int, int], t_eps: float,
+                        t_eps_mu: float) -> jax.Array:
+    """Oracle for kernels.escg_update: vmapped sequential tile updates."""
+    h, w = grid.shape
+    th, tw = tile_shape
+    tiles = to_tiles(grid, th, tw)
+    upd = jax.vmap(lambda t, c, d, ua, ud: tile_update(
+        t, ProposalBatch(c, d, ua, ud), t_eps, t_eps_mu, jnp.asarray(dom)))
+    tiles = upd(tiles, cell, dirn, u_act, u_dom)
+    return from_tiles(tiles, h, w)
+
+
+def philox4x32_ref(c0, c1, c2, c3, k0: int, k1: int):
+    """numpy uint64-based Philox-4x32-10 (independent of the kernel's
+    16-bit-limb multiplies)."""
+    c0 = np.asarray(c0, np.uint32)
+    c1 = np.asarray(c1, np.uint32)
+    c2 = np.asarray(c2, np.uint32)
+    c3 = np.asarray(c3, np.uint32)
+    k0 = np.uint32(k0)
+    k1 = np.uint32(k1)
+    for r in range(10):
+        if r > 0:
+            with np.errstate(over="ignore"):   # uint32 wrap is the algorithm
+                k0 = np.uint32(k0 + PHILOX_W0)
+                k1 = np.uint32(k1 + PHILOX_W1)
+        p0 = c0.astype(np.uint64) * PHILOX_M0
+        p1 = c2.astype(np.uint64) * PHILOX_M1
+        hi0 = (p0 >> np.uint64(32)).astype(np.uint32)
+        lo0 = p0.astype(np.uint32)
+        hi1 = (p1 >> np.uint64(32)).astype(np.uint32)
+        lo1 = p1.astype(np.uint32)
+        c0, c1, c2, c3 = (hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0)
+    return c0, c1, c2, c3
+
+
+def philox_bits_ref(n: int, seed: Tuple[int, int], stream: int = 0,
+                    block: int = 1024) -> np.ndarray:
+    """Matches kernels.philox.philox_bits layout exactly."""
+    n_ctr = -(-n // 4)
+    n_blocks = -(-n_ctr // block)
+    total = n_blocks * block
+    idx = np.arange(total, dtype=np.uint32)
+    x0, x1, x2, x3 = philox4x32_ref(
+        idx, np.full(total, stream, np.uint32),
+        np.zeros(total, np.uint32), np.zeros(total, np.uint32),
+        seed[0], seed[1])
+    return np.stack([x0, x1, x2, x3], axis=0).T.reshape(-1)[:n]
+
+
+def density_ref(grid: jax.Array, species: int) -> jax.Array:
+    return jnp.bincount(grid.reshape(-1), length=species + 1)
+
+
+def fused_proposals_ref(n_tiles: int, k: int, interior: int, nbhd: int,
+                        seed, round_idx: int):
+    """Host-side derivation of the fused kernel's proposal stream (same
+    Philox counters/mapping) -> (cell, dirn, u_act, u_dom), each
+    (n_tiles, k)."""
+    idx = np.arange(n_tiles * k, dtype=np.uint32)
+    c1 = np.full(idx.shape, round_idx, np.uint32)
+    z = np.zeros(idx.shape, np.uint32)
+    x0, x1, x2, x3 = philox4x32_ref(idx, c1, z, z, int(seed[0]),
+                                    int(seed[1]))
+    cell = (x0 % np.uint32(interior)).astype(np.int32).reshape(n_tiles, k)
+    dirn = (x1 % np.uint32(nbhd)).astype(np.int32).reshape(n_tiles, k)
+    ua = ((x2 >> 8).astype(np.float32) * 2.0 ** -24).reshape(n_tiles, k)
+    ud = ((x3 >> 8).astype(np.float32) * 2.0 ** -24).reshape(n_tiles, k)
+    return cell, dirn, ua, ud

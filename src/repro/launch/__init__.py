@@ -1,0 +1,2 @@
+# Launchers: mesh.py, dryrun.py, train.py, serve.py, escg_run.py.
+# NOTE: dryrun must be imported/run as __main__ only (it sets XLA_FLAGS).

@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import including `from repro...` — jax locks the
+#   device count on first init (brief: MULTI-POD DRY-RUN step 0).
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, cell_is_runnable, get_arch  # noqa: E402
+from ..models import spec as spec_mod  # noqa: E402
+from ..models.registry import build_model  # noqa: E402
+from ..parallel import roofline  # noqa: E402
+from ..parallel.ctx import activation_sharding  # noqa: E402
+from ..parallel.sharding import make_rules, named_sharding_tree  # noqa: E402
+from ..runtime import train_lib  # noqa: E402
+from .mesh import make_production_mesh, n_chips  # noqa: E402
+
+ESCG_ARCH = "escg-lattice"       # the paper's own workload, dry-run as well
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                  # noqa: BLE001
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _cost_dict(compiled) -> Optional[Dict[str, float]]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:                                       # noqa: BLE001
+        return None
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if ca else None
+
+
+def _compile_cell(cfg, shape, mesh, rules):
+    """Lower + compile one variant; returns (compiled, n_tokens)."""
+    model = build_model(cfg)
+    brule = rules.get("batch")
+
+    def batch_shardings(in_specs):
+        return {k: NamedSharding(
+            mesh, P(*((brule,) + (None,) * (len(v.shape) - 1))))
+            for k, v in in_specs.items()}
+
+    with mesh, activation_sharding(mesh, rules):
+        in_specs = model.input_specs(shape)
+        batch_sh = batch_shardings(in_specs)
+        if shape.kind == "train":
+            sspecs = train_lib.state_specs(model)
+            state_sh = named_sharding_tree(sspecs, mesh, rules)
+            lowered = jax.jit(
+                train_lib.make_train_step(model),
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            ).lower(spec_mod.abstract(sspecs), in_specs)
+            n_tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            params_sh = named_sharding_tree(model.param_specs, mesh, rules)
+            lowered = jax.jit(
+                train_lib.make_prefill_step(model, max_len=shape.seq_len),
+                in_shardings=(params_sh, batch_sh),
+            ).lower(model.abstract_params(), in_specs)
+            n_tokens = shape.global_batch * shape.seq_len
+        else:                                   # decode
+            params_sh = named_sharding_tree(model.param_specs, mesh, rules)
+            cache_specs = model.cache_specs(shape.global_batch,
+                                            shape.seq_len)
+            cache_sh = named_sharding_tree(cache_specs, mesh, rules)
+            lowered = jax.jit(
+                train_lib.make_decode_step(model),
+                in_shardings=(params_sh, cache_sh, batch_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            ).lower(model.abstract_params(),
+                    spec_mod.abstract(cache_specs), in_specs)
+            n_tokens = shape.global_batch       # one token per sequence
+        compiled = lowered.compile()
+    return compiled, n_tokens
+
+
+def _extract_cost(compiled):
+    cost = _cost_dict(compiled) or {}
+    coll = roofline.collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def loop_corrected_cost(cfg, shape, mesh, rules):
+    """XLA HloCostAnalysis counts a while-loop body ONCE, so a scanned
+    L-layer module undercounts flops/bytes/collectives by ~L. Correction:
+    compile UNROLLED 1-unit and 2-unit variants; per-unit cost is their
+    difference; total = c1 + (n_units - 1) * (c2 - c1). For zamba2 a unit is
+    one group of `attn_every` mamba blocks + one shared-attention
+    application; for whisper enc and dec layers scale together."""
+    unit = cfg.attn_every if cfg.family == "hybrid" else 1
+    n_units = cfg.n_layers / unit
+
+    def small(n):
+        kw = dict(n_layers=n * unit, scan_layers=False)
+        if cfg.family == "encdec":
+            kw["enc_layers"] = n
+        return cfg.replace(**kw)
+
+    c1, _ = _compile_cell(small(1), shape, mesh, rules)
+    f1, b1, coll1 = _extract_cost(c1)
+    c2, _ = _compile_cell(small(2), shape, mesh, rules)
+    f2, b2, coll2 = _extract_cost(c2)
+    scale = n_units - 1.0
+    flops = f1 + scale * (f2 - f1)
+    byts = b1 + scale * (b2 - b1)
+    coll = {k: coll1[k] + scale * (coll2[k] - coll1[k]) for k in coll1}
+    return flops, byts, coll
+
+
+def lower_lm_cell(arch: str, shape_name: str, multi_pod: bool,
+                  rule_overrides: Optional[Dict[str, Any]] = None,
+                  cfg_overrides: Optional[Dict[str, Any]] = None
+                  ) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    cfg = get_arch(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi_pod" if multi_pod else "single_pod",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = n_chips(mesh)
+    model = build_model(cfg)
+    overrides = dict(cfg.rule_overrides)
+    if rule_overrides:
+        overrides.update(rule_overrides)
+    rules = make_rules(mesh, overrides, shape.kind, shape.global_batch)
+
+    t0 = time.time()
+    compiled, n_tokens = _compile_cell(cfg, shape, mesh, rules)
+    f_raw, b_raw, coll_raw = _extract_cost(compiled)
+    memory = _memory_analysis_dict(compiled)
+    del compiled
+    flops, byts, coll = loop_corrected_cost(cfg, shape, mesh, rules)
+    elapsed = time.time() - t0
+
+    kind = "train" if shape.kind == "train" else "serve"
+    terms = roofline.roofline_terms(flops, byts, float(sum(coll.values())),
+                                    chips)
+    mf = roofline.model_flops(model.n_active_params(), n_tokens, kind)
+    terms["model_flops_total"] = mf
+    terms["model_flops_per_chip"] = mf / chips
+    terms["useful_flops_ratio"] = (mf / chips) / flops if flops else 0.0
+    terms["collective_breakdown"] = coll
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        "chips": chips, "status": "ok",
+        "compile_s": round(elapsed, 1),
+        "n_params": model.n_params(),
+        "n_active_params": model.n_active_params(),
+        "n_tokens": n_tokens,
+        "memory": memory,
+        "cost_raw_scanned": {"flops": f_raw, "bytes": b_raw,
+                             "note": "while-loop bodies counted once"},
+        "roofline": terms,
+    }
+
+
+def lower_escg_cell(multi_pod: bool, lattice: int = 16384,
+                    tile=(8, 128), species: int = 5) -> Dict[str, Any]:
+    """Dry-run the paper's own workload: one sublattice round on a lattice
+    2-D-sharded over (data x model); pod axis = vmapped IID trials."""
+    from ..core import dominance
+    from ..core.sublattice import run_round
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = n_chips(mesh)
+    th, tw = tile
+    n_trials = mesh.shape.get("pod", 1)
+    h = w = lattice
+    n_tiles = (h // th) * (w // tw)
+    k_per = (h * w) // n_tiles
+    t0 = time.time()
+
+    grid_spec = jax.ShapeDtypeStruct((n_trials, h, w), jnp.int32)
+    prop_i = jax.ShapeDtypeStruct((n_trials, n_tiles, k_per), jnp.int32)
+    prop_f = jax.ShapeDtypeStruct((n_trials, n_tiles, k_per), jnp.float32)
+    dom = dominance.circulant(species, (1, 2))
+    # NB: the torus shift is lowered as a constant — a traced shift turns
+    # jnp.roll into a device-spanning gather under vmap; the collective
+    # structure (edge-sliver permutes) is identical for every shift value.
+    shift = jnp.array([3, 5], jnp.int32)
+
+    grid_sh = NamedSharding(mesh, P("pod", "data", "model") if multi_pod
+                            else P(None, "data", "model"))
+    prop_sh = NamedSharding(mesh, P("pod" if multi_pod else None, None,
+                                    None))
+
+    from ..core.rng import ProposalBatch
+    t_eps, t_eps_mu = 0.2, 0.6
+
+    def round_fn(grid, cell, dirn, ua, ud):
+        f = lambda g, c, d, a, u: run_round(
+            g, ProposalBatch(c, d, a, u), shift, (th, tw), t_eps, t_eps_mu,
+            jnp.asarray(dom), roll_back=False)   # §Perf H3 iter-1
+        return jax.vmap(f)(grid, cell, dirn, ua, ud)
+
+    with mesh:
+        lowered = jax.jit(
+            round_fn,
+            in_shardings=(grid_sh, prop_sh, prop_sh, prop_sh, prop_sh),
+            out_shardings=grid_sh,
+            donate_argnums=(0,),
+        ).lower(grid_spec, prop_i, prop_i, prop_f, prop_f)
+        compiled = lowered.compile()
+
+    cost = _cost_dict(compiled)
+    hlo = compiled.as_text()
+    updates = n_trials * n_tiles * k_per
+    terms = roofline.summarize(cost, hlo, chips, 0, 1, "serve")
+    terms["updates_per_round"] = updates
+    return {
+        "arch": ESCG_ARCH, "shape": f"L{lattice}_tile{th}x{tw}",
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        "chips": chips, "status": "ok",
+        "compile_s": round(time.time() - t0, 1),
+        "memory": _memory_analysis_dict(compiled),
+        "cost": {k: cost[k] for k in ("flops", "bytes accessed")
+                 if cost and k in cost},
+        "roofline": terms,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", type=str, default="all",
+                    help="arch id, 'all', or 'escg'")
+    ap.add_argument("--shape", type=str, default="all")
+    ap.add_argument("--mesh", type=str, default="both",
+                    choices=("single_pod", "multi_pod", "both"))
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--escg-lattice", type=int, default=16384)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (["single_pod", "multi_pod"] if args.mesh == "both"
+              else [args.mesh])
+
+    cells = []
+    for mp in meshes:
+        for arch in archs:
+            if arch == "escg":
+                cells.append((ESCG_ARCH, f"L{args.escg_lattice}", mp))
+                continue
+            for shape in shapes:
+                cells.append((arch, shape, mp))
+
+    n_ok = n_fail = n_skip = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{mp}".replace("/", "_")
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[dryrun] cached {tag}")
+            continue
+        print(f"[dryrun] lowering {tag} ...", flush=True)
+        try:
+            if arch == ESCG_ARCH:
+                rec = lower_escg_cell(mp == "multi_pod",
+                                      lattice=args.escg_lattice)
+            else:
+                rec = lower_lm_cell(arch, shape, mp == "multi_pod")
+            status = rec["status"]
+        except Exception as e:                              # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "mesh": mp,
+                   "status": "error", "error": str(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+            status = "error"
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if status == "ok":
+            n_ok += 1
+            mem = rec.get("memory", {}).get("total_bytes_per_device", 0)
+            dom = rec.get("roofline", {}).get("dominant", "?")
+            print(f"[dryrun]   ok {tag}: {mem/2**30:.2f} GiB/dev, "
+                  f"dominant={dom}, compile={rec['compile_s']}s",
+                  flush=True)
+        elif status == "skipped":
+            n_skip += 1
+            print(f"[dryrun]   skipped {tag}: {rec['reason']}")
+        else:
+            n_fail += 1
+            print(f"[dryrun]   ERROR {tag}: {rec['error'][:300]}")
+    print(f"[dryrun] done ok={n_ok} skip={n_skip} fail={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Batched serving driver: prefill a batch of prompts, decode N tokens
+(deliverable b; greedy decoding on synthetic prompts)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch
+from ..configs.base import ShapeConfig
+from ..data.synthetic import batch_for_model
+from ..models.registry import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="granite-3-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt_len", type=int, default=64)
+    ap.add_argument("--gen_len", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    max_len = args.prompt_len + args.gen_len
+
+    shape = ShapeConfig("serve", args.prompt_len, args.batch, "prefill")
+    batch = batch_for_model(model, shape, 0, args.seed)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.gen_len - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    seqs = jnp.stack(out, axis=1)
+    print(f"[serve] arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen_len}")
+    print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode "
+          f"{t_decode*1e3:.1f} ms total, "
+          f"{args.batch*(args.gen_len-1)/max(t_decode,1e-9):.1f} tok/s")
+    print(f"[serve] sample continuation tokens: {seqs[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Shared transformer building blocks: norms, rotary, GQA attention (full,
+kv-chunked flash-style, and cached decode), gated MLP."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .spec import ParamSpec
+
+
+def rmsnorm_spec(d: int, dtype: str) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones", dtype=dtype)}
+
+
+def rmsnorm(x: jax.Array, p: dict, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-np.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------ attention -------------------------------- #
+
+def attn_specs(cfg, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    dt = cfg.param_dtype
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "q_heads", "head_dim"),
+                        dtype=dt),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"),
+                        dtype=dt),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"),
+                        dtype=dt),
+        "wo": ParamSpec((h, hd, d), ("q_heads", "head_dim", "embed"),
+                        dtype=dt),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = ParamSpec((h, hd), ("q_heads", "head_dim"),
+                                init="zeros", dtype=dt)
+        specs["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                                init="zeros", dtype=dt)
+        specs["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                                init="zeros", dtype=dt)
+    return specs
+
+
+def qkv_proj(p: dict, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array,
+                                                  jax.Array]:
+    ct = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(ct))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(ct))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(ct))
+    if "bq" in p:
+        q = q + p["bq"].astype(ct)
+        k = k + p["bk"].astype(ct)
+        v = v + p["bv"].astype(ct)
+    return q, k, v
+
+
+def _block_attn(q, k, v, mask, scale):
+    """Unnormalized block attention: returns (acc, lse_max, denom)."""
+    s = jnp.einsum("bsgkh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1)                          # (B,KV,G,S)
+    e = jnp.exp(s - m[..., None])
+    e = jnp.where(mask, e, 0.0)
+    denom = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bkgst,btkh->bkgsh", e.astype(v.dtype), v)
+    return acc.astype(jnp.float32), m, denom
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, q_offset=0,
+                  kv_len: Optional[jax.Array] = None,
+                  chunk: int = 0) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, S, H, hd); k, v: (B, T, KV, hd); H = KV * G.
+    ``causal``: mask kv_idx > q_idx + q_offset.  ``kv_len``: valid cache
+    length (decode).  ``chunk`` > 0 enables kv-chunked online-softmax
+    (flash-style) when T > chunk — O(S * chunk) score memory.
+    Returns (B, S, H, hd).
+    """
+    b, sq, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, sq, g, kv, hd)
+    q_idx = jnp.asarray(q_offset) + jnp.arange(sq)
+
+    def mask_for(t0, tc):
+        kv_idx = t0 + jnp.arange(tc)
+        m = jnp.ones((sq, tc), bool)
+        if causal:
+            m &= kv_idx[None, :] <= q_idx[:, None]
+        if kv_len is not None:
+            m &= kv_idx[None, :] < jnp.asarray(kv_len)
+        return m[None, None, None]                   # (1,1,1,S,Tc)
+
+    def finish(acc, denom):
+        out = acc / jnp.maximum(denom, 1e-30)[..., None]
+        # acc dims (B, KV, G, S, hd) -> (B, S, G, KV, hd) -> (B, S, H, hd),
+        # inverting the q reshape (b, sq, g, kv, hd).
+        return out.astype(q.dtype).transpose(0, 3, 2, 1, 4).reshape(
+            b, sq, h, hd)
+
+    if chunk <= 0 or t <= chunk:
+        acc, _, denom = _block_attn(qg, k, v, mask_for(0, t), scale)
+        return finish(acc, denom)
+
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        eff_len = kv_len if kv_len is not None else t
+    else:
+        kp, vp = k, v
+        eff_len = kv_len
+    kc = kp.reshape(b, n_chunks, chunk, kv, hd)
+    vc = vp.reshape(b, n_chunks, chunk, kv, hd)
+
+    @jax.checkpoint
+    def body(carry, idx_kc_vc):
+        m_run, d_run, a_run = carry
+        i, kb, vb = idx_kc_vc
+        t0 = i * chunk
+        kv_idx = t0 + jnp.arange(chunk)
+        msk = jnp.ones((sq, chunk), bool)
+        if causal:
+            msk &= kv_idx[None, :] <= q_idx[:, None]
+        if eff_len is not None:
+            msk &= kv_idx[None, :] < jnp.asarray(eff_len)
+        acc, m_blk, d_blk = _block_attn(qg, kb, vb, msk[None, None, None],
+                                        scale)
+        m_new = jnp.maximum(m_run, m_blk)
+        s_run = jnp.exp(m_run - m_new)
+        s_blk = jnp.exp(m_blk - m_new)
+        d_new = d_run * s_run + d_blk * s_blk
+        a_new = a_run * s_run[..., None] + acc * s_blk[..., None]
+        return (m_new, d_new, a_new), None
+
+    m0 = jnp.full((b, kv, g, sq), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    (m_f, d_f, a_f), _ = jax.lax.scan(
+        body, (m0, d0, a0),
+        (jnp.arange(n_chunks), kc.transpose(1, 0, 2, 3, 4),
+         vc.transpose(1, 0, 2, 3, 4)))
+    return finish(a_f, d_f)
+
+
+def attn_out(p: dict, y: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(y.dtype))
+
+
+# --------------------------------- mlp ----------------------------------- #
+
+def mlp_specs(cfg, d_ff: Optional[int] = None, gated: bool = True) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    specs = {
+        "wi": ParamSpec((d, f), ("embed", "ffn"), dtype=dt),
+        "wo": ParamSpec((f, d), ("ffn", "embed"), dtype=dt),
+    }
+    if gated:
+        specs["wg"] = ParamSpec((d, f), ("embed", "ffn"), dtype=dt)
+    return specs
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    ct = x.dtype
+    h = x @ p["wi"].astype(ct)
+    if "wg" in p:
+        h = jax.nn.silu(h) * (x @ p["wg"].astype(ct))
+    else:
+        h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
+    return h @ p["wo"].astype(ct)

@@ -1,0 +1,117 @@
+"""Unified model interface: every assigned architecture exposes the same
+five entry points, used by the trainer, server, dry-run, and smoke tests."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, transformer
+from . import spec as spec_mod
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    param_specs: Dict[str, Any]
+
+    # ---- parameters ----
+    def abstract_params(self):
+        return spec_mod.abstract(self.param_specs)
+
+    def init(self, key: jax.Array):
+        return spec_mod.initialize(self.param_specs, key)
+
+    def n_params(self) -> int:
+        return spec_mod.count_params(self.param_specs)
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top-k of the expert pool)."""
+        cfg = self.cfg
+        total = self.n_params()
+        if cfg.family != "moe" or not cfg.moe_experts:
+            return total
+        import math
+        specs = spec_mod.tree_paths(self.param_specs)
+        expert = sum(
+            math.prod(s.shape)
+            for p, s in specs.items()
+            if "/moe/w" in p)
+        active = expert * cfg.moe_topk // cfg.moe_experts
+        return total - expert + active
+
+    # ---- compute ----
+    def loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.loss_fn(self.cfg, params, batch)
+        return transformer.loss_fn(self.cfg, params, batch)
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        if self.cfg.family == "encdec":
+            return encdec.prefill(self.cfg, params, batch, max_len)
+        return transformer.prefill(self.cfg, params, batch, max_len)
+
+    def decode_step(self, params, cache, tokens):
+        if self.cfg.family == "encdec":
+            return encdec.decode_step(self.cfg, params, cache, tokens)
+        return transformer.decode_step(self.cfg, params, cache, tokens)
+
+    def cache_specs(self, batch: int, max_len: int):
+        if self.cfg.family == "encdec":
+            return encdec.cache_specs(self.cfg, batch, max_len)
+        return transformer.cache_specs(self.cfg, batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return spec_mod.abstract(self.cache_specs(batch, max_len))
+
+    def init_cache(self, batch: int, max_len: int):
+        return spec_mod.map_specs(
+            lambda p, s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+            self.cache_specs(batch, max_len))
+
+    # ---- inputs ----
+    def input_specs(self, shape: ShapeConfig,
+                    batch_override: Optional[int] = None) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of one cell."""
+        cfg = self.cfg
+        b = batch_override or shape.global_batch
+        s = shape.seq_len
+        i32 = jnp.dtype("int32")
+        f32 = jnp.dtype("float32")
+        if shape.kind in ("train", "prefill"):
+            out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cfg.family == "encdec":
+                out["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.enc_len, cfg.d_model), f32)
+            if cfg.family == "vlm":
+                out["img_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vlm_prefix, cfg.d_model), f32)
+            return out
+        # decode: one token with a KV/state cache of seq_len
+        return {"tokens": jax.ShapeDtypeStruct((b,), i32)}
+
+    def concrete_inputs(self, shape: ShapeConfig, key: jax.Array,
+                        batch_override: Optional[int] = None):
+        specs = self.input_specs(shape, batch_override)
+        out = {}
+        for name, s in specs.items():
+            k = jax.random.fold_in(key, hash(name) % (2 ** 31))
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                out[name] = jax.random.randint(k, s.shape, 0, self.cfg.vocab,
+                                               dtype=s.dtype)
+            else:
+                out[name] = jax.random.normal(k, s.shape, s.dtype)
+        return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        specs = encdec.build_specs(cfg)
+    else:
+        specs = transformer.build_specs(cfg)
+    return Model(cfg=cfg, param_specs=specs)

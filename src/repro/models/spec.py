@@ -1,0 +1,113 @@
+"""Lightweight parameter-spec module system.
+
+Models declare parameters as trees of ``ParamSpec`` (shape + dtype + logical
+axes + initializer). From one spec tree we derive:
+  * abstract params (``jax.ShapeDtypeStruct``) — used by the multi-pod
+    dry-run so a 1T-parameter model never allocates;
+  * concrete params (deterministic per-leaf fold_in init) — smoke tests,
+    examples;
+  * ``PartitionSpec`` trees via logical-axis rules (repro.parallel.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis names, len == ndim
+    init: str = "normal"                     # normal | zeros | ones | scaled
+    scale: float = 1.0                       # stddev multiplier / fan-in mode
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape "
+                             f"{self.shape}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_paths(tree: Tree, prefix: str = "") -> Dict[str, ParamSpec]:
+    out = {}
+    if is_spec(tree):
+        out[prefix] = tree
+        return out
+    for k in sorted(tree.keys()):
+        out.update(tree_paths(tree[k], f"{prefix}/{k}" if prefix else k))
+    return out
+
+
+def map_specs(fn: Callable[[str, ParamSpec], Any], tree: Tree,
+              prefix: str = "") -> Tree:
+    if is_spec(tree):
+        return fn(prefix, tree)
+    return {k: map_specs(fn, v, f"{prefix}/{k}" if prefix else k)
+            for k, v in tree.items()}
+
+
+def abstract(tree: Tree) -> Tree:
+    return map_specs(
+        lambda p, s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)), tree)
+
+
+def _leaf_key(key: jax.Array, path: str) -> jax.Array:
+    h = np.uint32(np.frombuffer(
+        path.encode(), dtype=np.uint8).astype(np.uint64).sum() * 2654435761
+        % (2 ** 31))
+    return jax.random.fold_in(key, int(h))
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # convention: last axis is the output axis for >=2D weights
+    if len(shape) <= 1:
+        return 1
+    return int(np.prod(shape[:-1]))
+
+
+def initialize(tree: Tree, key: jax.Array) -> Tree:
+    def init_leaf(path: str, s: ParamSpec):
+        dt = jnp.dtype(s.dtype)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        k = _leaf_key(key, path)
+        std = s.scale / np.sqrt(_fan_in(s.shape))
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(dt)
+    return map_specs(init_leaf, tree)
+
+
+def partition_tree(tree: Tree, rules: Dict[str, Optional[Any]]) -> Tree:
+    """logical axes -> jax.sharding.PartitionSpec via a rules dict."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(path: str, s: ParamSpec):
+        return P(*(rules.get(a) if a is not None else None for a in s.axes))
+    return map_specs(leaf, tree)
+
+
+def count_params(tree: Tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in tree_paths(tree).values())
+
+
+def param_bytes(tree: Tree) -> int:
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in tree_paths(tree).values())
+
+
+def stack_layers(tree: Tree, n_layers: int) -> Tree:
+    """Prepend a scanned 'layers' axis to every leaf (for lax.scan stacks)."""
+    return map_specs(
+        lambda p, s: dataclasses.replace(
+            s, shape=(n_layers,) + s.shape, axes=("layers",) + s.axes), tree)

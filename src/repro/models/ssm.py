@@ -1,0 +1,275 @@
+"""State-space (Mamba) blocks.
+
+Mamba-1 (falcon-mamba-7b): selective scan over a diagonal SSM, computed with
+a chunked associative scan (sequential across chunks, parallel within) — the
+same schedule idea as the ESCG sublattice engine (DESIGN.md §4).
+Mamba-2 (zamba2-7b): SSD dual form — scalar-per-head decay, chunked matmul
+formulation (MXU-friendly).
+
+Both provide single-token decode recurrences for serving.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .spec import ParamSpec
+
+
+# ------------------------------- mamba-1 --------------------------------- #
+
+def mamba1_specs(cfg) -> dict:
+    d, di, n, cv = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dtr = max(1, d // 16)
+    dt = cfg.param_dtype
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "inner2"), dtype=dt),
+        "conv_w": ParamSpec((cv, di), ("conv", "inner"), dtype=dt),
+        "conv_b": ParamSpec((di,), ("inner",), init="zeros", dtype=dt),
+        "x_dbc": ParamSpec((di, dtr + 2 * n), ("inner", "dbc"), dtype=dt),
+        "dt_proj": ParamSpec((dtr, di), ("dt_rank", "inner"), dtype=dt),
+        "dt_bias": ParamSpec((di,), ("inner",), init="zeros", dtype=dt),
+        "a_log": ParamSpec((di, n), ("inner", "state"), init="ones",
+                           dtype="float32"),
+        "d_skip": ParamSpec((di,), ("inner",), init="ones", dtype="float32"),
+        "out_proj": ParamSpec((di, d), ("inner", "embed"), dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,di), w: (cv,di). state: (B,cv-1,di)."""
+    cv = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cv - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(cv))
+    return out + b.astype(x.dtype)
+
+
+def _ssm_scan_chunked(a: jax.Array, bu: jax.Array, h0: jax.Array,
+                      chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + bu_t, diagonal. a, bu: (B, S, di, n) f32.
+    Returns (h over all t, final h). Chunked: associative scan within a
+    chunk, lax.scan across chunks. (Reference/spec path — materializes the
+    full (B,S,di,n) state; the layer uses the fused variant below.)"""
+    b, s, di, n = a.shape
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    a_c = a.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    bu_c = bu.reshape(b, nc, chunk, di, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(l, r):
+        al, ul = l
+        ar, ur = r
+        return al * ar, ul * ar + ur
+
+    def step(h, xs):
+        ac, uc = xs
+        aa, uu = jax.lax.associative_scan(combine, (ac, uc), axis=1)
+        h_all = aa * h[:, None] + uu
+        return h_all[:, -1], h_all
+
+    h_last, h_all = jax.lax.scan(step, h0, (a_c, bu_c))
+    h_all = h_all.transpose(1, 0, 2, 3, 4).reshape(b, s, di, n)
+    return h_all, h_last
+
+
+def _ssm_scan_fused(xc: jax.Array, dt: jax.Array, b_ssm: jax.Array,
+                    c_ssm: jax.Array, a: jax.Array, d_skip: jax.Array,
+                    h0: jax.Array, chunk: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Fused selective scan: y_t = C_t · h_t + D x_t with
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t, WITHOUT ever materializing a
+    (B, S, di, n) tensor in HBM (§Perf H1): the (B, Q, di, n) decay/input
+    products live only inside each chunk's scan body.
+
+    xc, dt: (B, S, di) f32;  b_ssm, c_ssm: (B, S, n) f32;  a: (di, n);
+    h0: (B, di, n). Returns (y (B, S, di) f32, h_last).
+    """
+    b, s, di = xc.shape
+    n = a.shape[-1]
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, ul = l
+        ar, ur = r
+        return al * ar, ul * ar + ur
+
+    @jax.checkpoint       # recompute hq in backward: without this the scan
+    def step(h, xs):      # saves (B,Q,di,n) residuals per chunk = the full
+        xq, dtq, bq, cq = xs                  # state tensor again (§Perf H1)
+        da = jnp.exp(dtq[..., None] * a)           # (B,Q,di,n) transient
+        bu = (dtq * xq)[..., None] * bq[:, :, None, :]
+        aa, uu = jax.lax.associative_scan(combine, (da, bu), axis=1)
+        hq = aa * h[:, None] + uu                  # (B,Q,di,n) transient
+        yq = jnp.einsum("bqdn,bqn->bqd", hq, cq)
+        return hq[:, -1], yq
+
+    h_last, y = jax.lax.scan(
+        step, h0, (to_chunks(xc), to_chunks(dt), to_chunks(b_ssm),
+                   to_chunks(c_ssm)))
+    y = y.swapaxes(0, 1).reshape(b, s, di)
+    return y + xc * d_skip, h_last
+
+
+def mamba1_forward(p: dict, x: jax.Array, cfg,
+                   state: Dict[str, jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d). Returns (y, new_state). state carries conv + ssm for
+    decode; pass None for training (zero init, state returned anyway)."""
+    bsz, s, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    dtr = max(1, cfg.d_model // 16)
+    ct = x.dtype
+
+    xz = x @ p["in_proj"].astype(ct)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = None if state is None else state["conv"]
+    xc = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    new_conv = jnp.concatenate(
+        [conv_state.astype(ct) if conv_state is not None else
+         jnp.zeros((bsz, cfg.ssm_conv - 1, di), ct), xi],
+        axis=1)[:, -(cfg.ssm_conv - 1):, :]
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ p["x_dbc"].astype(ct)
+    dt_r, b_ssm, c_ssm = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(ct)
+                         + p["dt_bias"].astype(ct)).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])                           # (di, n), negative
+
+    h0 = (jnp.zeros((bsz, di, n), jnp.float32) if state is None
+          else state["ssm"])
+    y, h_last = _ssm_scan_fused(
+        xc.astype(jnp.float32), dt, b_ssm.astype(jnp.float32),
+        c_ssm.astype(jnp.float32), a, p["d_skip"], h0, cfg.ssm_chunk)
+    y = y.astype(ct) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(ct)
+    return out, {"conv": new_conv, "ssm": h_last}
+
+
+# ------------------------------- mamba-2 --------------------------------- #
+
+def mamba2_specs(cfg) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    cv = cfg.ssm_conv
+    dt = cfg.param_dtype
+    d_conv_in = di + 2 * n                      # x, B, C share the conv
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + nh),
+                             ("embed", "inner_zxbcdt"), dtype=dt),
+        "conv_w": ParamSpec((cv, d_conv_in), ("conv", "inner"), dtype=dt),
+        "conv_b": ParamSpec((d_conv_in,), ("inner",), init="zeros", dtype=dt),
+        "a_log": ParamSpec((nh,), ("heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamSpec((nh,), ("heads",), init="zeros",
+                             dtype="float32"),
+        "d_skip": ParamSpec((nh,), ("heads",), init="ones", dtype="float32"),
+        "norm_scale": ParamSpec((di,), ("inner",), init="ones", dtype=dt),
+        "out_proj": ParamSpec((di, d), ("inner", "embed"), dtype=dt),
+    }
+
+
+def _segsum_decay(log_a: jax.Array) -> jax.Array:
+    """L[i, j] = exp(sum_{j<t<=i} log_a_t) for j <= i else 0.
+    log_a: (..., Q). Returns (..., Q, Q)."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def mamba2_forward(p: dict, x: jax.Array, cfg,
+                   state: Dict[str, jax.Array] = None
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """SSD chunked form. x: (B,S,d) -> (y, state)."""
+    bsz, s, _ = x.shape
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = di // nh                                      # head dim
+    ct = x.dtype
+
+    proj = x @ p["in_proj"].astype(ct)
+    z, xbc, dt_in = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc_c = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                     conv_state))
+    new_conv = jnp.concatenate(
+        [conv_state.astype(ct) if conv_state is not None else
+         jnp.zeros((bsz, cfg.ssm_conv - 1, di + 2 * n), ct), xbc],
+        axis=1)[:, -(cfg.ssm_conv - 1):, :]
+    xi, b_ssm, c_ssm = jnp.split(xbc_c, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32)
+                         + p["dt_bias"])               # (B,S,nh)
+    a = -jnp.exp(p["a_log"])                           # (nh,)
+    log_da = dt * a                                    # (B,S,nh) negative
+    xh = xi.reshape(bsz, s, nh, ph).astype(jnp.float32)
+    bf = b_ssm.astype(jnp.float32)                     # (B,S,n)
+    cf = c_ssm.astype(jnp.float32)
+    dtx = xh * dt[..., None]                           # dt-weighted input
+
+    q = cfg.ssm_chunk
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    la = log_da.reshape(bsz, nc, q, nh)
+    xq = dtx.reshape(bsz, nc, q, nh, ph)
+    bq = bf.reshape(bsz, nc, q, n)
+    cq = cf.reshape(bsz, nc, q, n)
+
+    # intra-chunk: Y = (C B^T ∘ L) X
+    lmat = _segsum_decay(la.transpose(0, 1, 3, 2))     # (B,nc,nh,Q,Q)
+    cb = jnp.einsum("bcin,bcjn->bcij", cq, bq)         # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bchij,bcij,bcjhp->bcihp",
+                         lmat, cb, xq)
+
+    # chunk states: S_c = sum_j decay_to_end_j * B_j X_j^T  (B,nc,nh,n,p)
+    cum = jnp.cumsum(la, axis=2)
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,nh)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_end, bq, xq)
+
+    # inter-chunk recurrence over c: H_{c} = decay_chunk_c * H_{c-1} + S_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B,nc,nh)
+    h0 = (jnp.zeros((bsz, nh, n, ph), jnp.float32) if state is None
+          else state["ssm"])
+
+    def step(h, xs):
+        dc, sc = xs                                    # (B,nh), (B,nh,n,p)
+        h_in = h
+        h = h * dc[:, :, None, None] + sc
+        return h, h_in
+
+    (h_last, h_prevs) = jax.lax.scan(
+        step, h0, (chunk_decay.transpose(1, 0, 2),
+                   s_chunk.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)         # (B,nc,nh,n,p)
+
+    # inter-chunk output: C_t decay_from_start_t H_{c-1}
+    decay_start = jnp.exp(cum)                         # (B,nc,Q,nh)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         cq, decay_start, h_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, s, nh, ph)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(ct)
+    # gated RMSNorm (mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    out = yf.astype(ct) @ p["out_proj"].astype(ct)
+    return out, {"conv": new_conv, "ssm": h_last}

@@ -1,0 +1,396 @@
+"""Decoder-only LM supporting the dense / moe / ssm / hybrid / vlm families,
+with scan-over-layers + remat, KV/SSM caches, prefill and decode steps.
+
+One code path serves minitron-4b, granite-3-8b, qwen1.5-32b, yi-9b,
+pixtral-12b (text backbone + stub image-embedding prefix), kimi-k2, grok-1,
+falcon-mamba-7b and zamba2-7b.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common, moe as moe_mod, ssm as ssm_mod
+from ..parallel.ctx import constrain
+from .spec import ParamSpec, stack_layers
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ------------------------------ param specs ------------------------------ #
+
+def _layer_specs(cfg) -> dict:
+    if cfg.family == "ssm":
+        return {"norm": common.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+                "mamba": (ssm_mod.mamba1_specs(cfg) if cfg.mamba_version == 1
+                          else ssm_mod.mamba2_specs(cfg))}
+    if cfg.family == "hybrid":
+        return {"norm": common.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+                "mamba": ssm_mod.mamba2_specs(cfg)}
+    block = {
+        "ln1": common.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+        "attn": common.attn_specs(cfg),
+        "ln2": common.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.family == "moe":
+        block["moe"] = moe_mod.moe_specs(cfg)
+    else:
+        block["mlp"] = common.mlp_specs(cfg)
+    return block
+
+
+def build_specs(cfg) -> dict:
+    specs: Dict[str, Any] = {
+        "embed": {"tokens": ParamSpec((cfg.vocab_padded, cfg.d_model),
+                                      ("vocab", "embed"),
+                                      dtype=cfg.param_dtype)},
+        "layers": stack_layers(_layer_specs(cfg), cfg.n_layers),
+        "final_norm": common.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_padded),
+                                     ("embed", "vocab"),
+                                     dtype=cfg.param_dtype)
+    if cfg.family == "hybrid":
+        # zamba2: ONE shared attention block reused every `attn_every` layers
+        specs["shared_attn"] = {
+            "ln1": common.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+            "attn": common.attn_specs(cfg),
+            "ln2": common.rmsnorm_spec(cfg.d_model, cfg.param_dtype),
+            "mlp": common.mlp_specs(cfg),
+        }
+    return specs
+
+
+# ------------------------------- caches ---------------------------------- #
+
+def cache_specs(cfg, batch: int, max_len: int) -> dict:
+    """Abstract cache layout for serving (ShapeDtypeStruct-compatible)."""
+    ct = cfg.compute_dtype
+    kv, hd = cfg.n_kv, cfg.head_dim
+    if cfg.family == "ssm":
+        di, n, cv = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        extra = 2 * cfg.ssm_state if cfg.mamba_version == 2 else 0
+        return {
+            "conv": ParamSpec((cfg.n_layers, batch, cv - 1, di + extra),
+                              ("layers", "batch", None, "inner"), dtype=ct),
+            "ssm": (ParamSpec((cfg.n_layers, batch, di, n),
+                              ("layers", "batch", "inner", "state"),
+                              dtype="float32") if cfg.mamba_version == 1 else
+                    ParamSpec((cfg.n_layers, batch, cfg.ssm_heads, n,
+                               cfg.d_inner // cfg.ssm_heads),
+                              ("layers", "batch", "heads", "state", None),
+                              dtype="float32")),
+            "len": ParamSpec((), (), init="zeros", dtype="int32"),
+        }
+    if cfg.family == "hybrid":
+        n_apps = cfg.n_layers // cfg.attn_every
+        di, n, cv = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        return {
+            "conv": ParamSpec((cfg.n_layers, batch, cv - 1, di + 2 * n),
+                              ("layers", "batch", None, "inner"), dtype=ct),
+            "ssm": ParamSpec((cfg.n_layers, batch, cfg.ssm_heads, n,
+                              cfg.d_inner // cfg.ssm_heads),
+                             ("layers", "batch", "heads", "state", None),
+                             dtype="float32"),
+            "k": ParamSpec((n_apps, batch, max_len, kv, hd),
+                           ("layers", "batch", "kv_seq", "kv_heads",
+                            "head_dim"), dtype=ct),
+            "v": ParamSpec((n_apps, batch, max_len, kv, hd),
+                           ("layers", "batch", "kv_seq", "kv_heads",
+                            "head_dim"), dtype=ct),
+            "len": ParamSpec((), (), init="zeros", dtype="int32"),
+        }
+    return {
+        "k": ParamSpec((cfg.n_layers, batch, max_len, kv, hd),
+                       ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                       dtype=ct),
+        "v": ParamSpec((cfg.n_layers, batch, max_len, kv, hd),
+                       ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                       dtype=ct),
+        "len": ParamSpec((), (), init="zeros", dtype="int32"),
+    }
+
+
+# ------------------------------- forward --------------------------------- #
+
+def scan_or_loop(body, carry, xs, n: int, use_scan: bool):
+    """lax.scan when use_scan else an unrolled python loop (used by the
+    dry-run's loop-corrected cost analysis: XLA HloCostAnalysis counts a
+    while-loop body once, so scanned modules undercount FLOPs/bytes by ~n)."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(n):
+        x_i = (None if xs is None
+               else jax.tree.map(lambda a: a[i], xs))
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _attn_block(cfg, p, x, positions, k_cache=None, v_cache=None,
+                cache_len=None):
+    """Pre-norm attention block. Returns (residual_out, k, v) where k/v are
+    the UPDATED caches in decode mode and this block's fresh k/v otherwise."""
+    h = common.rmsnorm(x, p["ln1"])
+    q, k, v = common.qkv_proj(p["attn"], h, cfg)
+    q = common.rotary(q, positions, cfg.rope_theta)
+    k = common.rotary(k, positions, cfg.rope_theta)
+    if k_cache is not None:
+        # decode: write this step's k/v at `cache_len`, attend over cache
+        k = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, cache_len, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, cache_len, 0, 0))
+        y = common.gqa_attention(
+            q, k, v, causal=False, q_offset=cache_len,
+            kv_len=cache_len + q.shape[1],
+            chunk=cfg.attn_chunk if k.shape[1] > cfg.attn_chunk else 0)
+    else:
+        y = common.gqa_attention(
+            q, k, v, causal=True,
+            chunk=cfg.attn_chunk if q.shape[1] > cfg.attn_chunk else 0)
+    out = x + common.attn_out(p["attn"], y)
+    return out, k, v
+
+
+def _mixer_block(cfg, p, x, positions, cache_slice, mode: str):
+    """One scanned layer. mode: 'train' | 'prefill' | 'decode'.
+    Returns (x, new_cache_slice, aux)."""
+    aux = jnp.float32(0.0)
+    if cfg.family in ("ssm", "hybrid"):
+        h = common.rmsnorm(x, p["norm"])
+        fwd = (ssm_mod.mamba1_forward
+               if cfg.family == "ssm" and cfg.mamba_version == 1
+               else ssm_mod.mamba2_forward)
+        state = None if mode == "train" else cache_slice
+        y, new_state = fwd(p["mamba"], h, cfg, state)
+        return x + y, new_state, aux
+
+    if mode == "decode":
+        x, k, v = _attn_block(cfg, p, x, positions,
+                              k_cache=cache_slice["k"],
+                              v_cache=cache_slice["v"],
+                              cache_len=cache_slice["len"])
+        new_cache = {"k": k, "v": v, "len": cache_slice["len"]}
+    else:
+        x, k, v = _attn_block(cfg, p, x, positions)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+
+    h = common.rmsnorm(x, p["ln2"])
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_layer(p["moe"], h, cfg)
+    else:
+        y = common.mlp(p["mlp"], h)
+    return x + y, new_cache, aux
+
+
+def _run_layers(cfg, params, x, positions, cache, mode: str):
+    """Scan over the layer stack; returns (x, new_cache, aux_sum)."""
+    layers = params["layers"]
+
+    def body(carry, xs):
+        h, aux = carry
+        lp, cs = xs
+        h = constrain(h, "act_batch", "act_seq", None)
+        h, new_cs, a = _mixer_block(cfg, lp, h, positions, cs, mode)
+        h = constrain(h, "act_batch", "act_seq", None)
+        return (h, aux + a), new_cs
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.family == "hybrid":
+        return _run_hybrid(cfg, params, x, positions, cache, mode, body)
+
+    if mode == "decode":
+        if cfg.family == "ssm":
+            cache_xs = {"conv": cache["conv"], "ssm": cache["ssm"]}
+        else:
+            cache_xs = {"k": cache["k"], "v": cache["v"],
+                        "len": jnp.broadcast_to(cache["len"],
+                                                (cfg.n_layers,))}
+    else:                                   # train / prefill: build fresh
+        cache_xs = None
+
+    (x, aux), new_cs = scan_or_loop(body, (x, jnp.float32(0.0)),
+                                    (layers, cache_xs), cfg.n_layers,
+                                    cfg.scan_layers)
+    new_cache = None
+    if mode == "decode":
+        if cfg.family == "ssm":
+            new_cache = {"conv": new_cs["conv"], "ssm": new_cs["ssm"],
+                         "len": cache["len"] + positions.shape[-1]}
+        else:
+            new_cache = {"k": new_cs["k"], "v": new_cs["v"],
+                         "len": cache["len"] + positions.shape[-1]}
+    elif mode == "prefill":
+        s = x.shape[1]
+        if cfg.family == "ssm":
+            new_cache = {"conv": new_cs["conv"], "ssm": new_cs["ssm"],
+                         "len": jnp.int32(s)}
+        else:
+            new_cache = {"k": new_cs["k"], "v": new_cs["v"],
+                         "len": jnp.int32(s)}
+    return x, new_cache, aux
+
+
+def _run_hybrid(cfg, params, x, positions, cache, mode, body):
+    """zamba2: groups of `attn_every` mamba layers, each followed by the
+    SHARED attention block (weights reused, per-application KV cache)."""
+    shared = params["shared_attn"]
+    every = cfg.attn_every
+    n_full = cfg.n_layers // every
+    rest = cfg.n_layers - n_full * every
+    layers = params["layers"]
+    aux = jnp.float32(0.0)
+
+    def slice_layers(tree, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], tree)
+
+    new_conv, new_ssm, new_k, new_v = [], [], [], []
+    for gi in range(n_full):
+        lp = slice_layers(layers, gi * every, (gi + 1) * every)
+        cs = None
+        if mode == "decode":
+            cs = {"conv": cache["conv"][gi * every:(gi + 1) * every],
+                  "ssm": cache["ssm"][gi * every:(gi + 1) * every]}
+        (x, aux), ncs = scan_or_loop(body, (x, aux), (lp, cs), every,
+                                     cfg.scan_layers)
+        if mode != "train":
+            new_conv.append(ncs["conv"])
+            new_ssm.append(ncs["ssm"])
+        # shared attention application gi
+        if mode == "decode":
+            x, k, v = _attn_block(cfg, shared, x, positions,
+                                  k_cache=cache["k"][gi],
+                                  v_cache=cache["v"][gi],
+                                  cache_len=cache["len"])
+            new_k.append(k)
+            new_v.append(v)
+        else:
+            x, k, v = _attn_block(cfg, shared, x, positions)
+            if mode == "prefill":
+                new_k.append(k)
+                new_v.append(v)
+    if rest:
+        lp = slice_layers(layers, n_full * every, cfg.n_layers)
+        cs = None
+        if mode == "decode":
+            cs = {"conv": cache["conv"][n_full * every:],
+                  "ssm": cache["ssm"][n_full * every:]}
+        (x, aux), ncs = scan_or_loop(body, (x, aux), (lp, cs), rest,
+                                     cfg.scan_layers)
+        if mode != "train":
+            new_conv.append(ncs["conv"])
+            new_ssm.append(ncs["ssm"])
+
+    new_cache = None
+    if mode != "train":
+        s = positions.shape[-1]
+        new_cache = {
+            "conv": jnp.concatenate(new_conv, 0),
+            "ssm": jnp.concatenate(new_ssm, 0),
+            "k": jnp.stack(new_k, 0),
+            "v": jnp.stack(new_v, 0),
+            "len": (cache["len"] + s) if mode == "decode" else jnp.int32(s),
+        }
+    return x, new_cache, aux
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    """One-hot-matmul embedding lookup. A plain gather's backward is a
+    scatter-add that GSPMD materializes as a FULL unsharded (V, d) buffer
+    per device; the one-hot contraction keeps both directions sharded."""
+    v = table.shape[0]
+    onehot = jax.nn.one_hot(tokens, v, dtype=table.dtype)
+    return (onehot @ table).astype(dtype)
+
+
+def _embed(cfg, params, tokens, img_embeds=None):
+    x = embed_lookup(params["embed"]["tokens"], tokens, cfg.compute_dtype)
+    if cfg.family == "vlm" and img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(cfg.compute_dtype), x], axis=1)
+    return x
+
+
+def _unembed(cfg, params, x):
+    w = (params["embed"]["tokens"].T if cfg.tie_embeddings
+         else params["unembed"])
+    logits = x @ w.astype(x.dtype)
+    if cfg.vocab_padded != cfg.vocab:
+        # mask (not slice!) the padded columns: a slice of the vocab-sharded
+        # dim would force an all-gather of the full logits tensor
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# ----------------------------- public entry ------------------------------ #
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_padded: int) -> jax.Array:
+    """Sharding-friendly CE: logsumexp + one-hot contraction (no gather over
+    the vocab-sharded dim). One-hot stays in the logits dtype (bf16) to
+    bound the transient; the contraction accumulates in f32."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, vocab_padded, dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot,
+                      preferred_element_type=jnp.float32)
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(cfg, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy; batch: tokens (B,S), labels (B,S),
+    optional img_embeds (B,P,d)."""
+    x = _embed(cfg, params, batch["tokens"], batch.get("img_embeds"))
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, _, aux = _run_layers(cfg, params, x, positions, None, "train")
+    x = common.rmsnorm(x, params["final_norm"])
+    if cfg.family == "vlm":
+        x = x[:, -batch["tokens"].shape[1]:]       # loss on text tokens only
+    logits = _unembed(cfg, params, x)
+    labels = batch["labels"]
+    ce = cross_entropy(logits, labels, cfg.vocab_padded)
+    total = ce + AUX_LOSS_WEIGHT * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg, params, batch, max_len: Optional[int] = None
+            ) -> Tuple[jax.Array, Any]:
+    """Process a prompt; returns (last-position logits, cache)."""
+    tokens = batch["tokens"]
+    x = _embed(cfg, params, tokens, batch.get("img_embeds"))
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, cache, _ = _run_layers(cfg, params, x, positions, None, "prefill")
+    x = common.rmsnorm(x, params["final_norm"])
+    logits = _unembed(cfg, params, x[:, -1:])
+    if max_len is not None and max_len > s and cfg.family not in ("ssm",):
+        pad = max_len - s
+        for key in ("k", "v"):
+            if key in cache:
+                cache[key] = jnp.pad(
+                    cache[key], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits[:, 0], cache
+
+
+def decode_step(cfg, params, cache, tokens: jax.Array
+                ) -> Tuple[jax.Array, Any]:
+    """One decode step. tokens: (B,) int32; cache from prefill/cache_specs.
+    Returns (logits (B, V), new cache)."""
+    x = _embed(cfg, params, tokens[:, None])
+    positions = jnp.reshape(cache["len"], (1,))
+    x, cache, _ = _run_layers(cfg, params, x, positions, cache, "decode")
+    x = common.rmsnorm(x, params["final_norm"])
+    logits = _unembed(cfg, params, x)
+    return logits[:, 0], cache

@@ -1,0 +1,2 @@
+from .optimizers import (Optimizer, adafactor, adamw, clip_by_global_norm,
+                         cosine_schedule, get_optimizer, global_norm)

@@ -1,0 +1,75 @@
+"""int8 error-feedback gradient compression (DESIGN.md §5).
+
+Motivation: on multi-pod meshes the gradient reduce-scatter/all-reduce over
+the DCN dominates the collective roofline term. Quantizing grads to int8
+with per-(leading-slice) scales cuts bytes-on-wire 2x (vs bf16) / 4x (vs
+f32); the quantization residual is fed back into the next step's grads
+(error feedback), which keeps SGD-style convergence guarantees.
+
+Usage: ``compressor = EFCompressor(); train_step = make_train_step(model,
+compressor=compressor.wrap)`` — the EF buffer rides in the optimizer state
+extension returned by ``state_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import spec as spec_mod
+from ..models.spec import ParamSpec
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row (leading-axis) int8 quantization."""
+    xf = x.astype(jnp.float32)
+    red = tuple(range(1, xf.ndim)) or (0,)
+    scale = jnp.max(jnp.abs(xf), axis=red, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_state_specs(param_specs) -> Any:
+    """Error-feedback residual buffer per param (same shape, bf16)."""
+    return spec_mod.map_specs(
+        lambda p, s: dataclasses.replace(s, init="zeros", dtype="bfloat16"),
+        param_specs)
+
+
+def compress_grads(grads: Any, ef: Any) -> Tuple[Any, Any]:
+    """Apply EF + int8 round-trip to every grad leaf. Returns
+    (compressed-dequantized grads, new EF residuals).
+
+    The round-trip models exactly what arrives after an int8 collective:
+    values identical to a quantize -> all-reduce(int8->f32 accum) ->
+    dequantize pipeline on real interconnect.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, scale = quantize_int8(gf)
+        deq = dequantize_int8(q, scale)
+        resid = (gf - deq).astype(jnp.bfloat16)
+        return deq.astype(g.dtype), resid
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_e = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_g, new_e
+
+
+def wire_bytes(param_specs, dtype_bytes: int = 4) -> Tuple[int, int]:
+    """(uncompressed, compressed) gradient bytes per sync for reporting."""
+    n = spec_mod.count_params(param_specs)
+    comp = n  # int8 payload
+    # + one f32 scale per leading row — negligible, ignore for the headline
+    return n * dtype_bytes, comp

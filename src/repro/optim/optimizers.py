@@ -1,0 +1,163 @@
+"""Optimizers built on the ParamSpec tree system (no external deps).
+
+AdamW for everything up to a few hundred B params; Adafactor (factored second
+moments, no first moment) for the 1T-class MoE where AdamW's fp32 moments
+exceed the per-chip HBM budget (see configs/kimi_k2_1t_a32b.py).
+Optimizer-state *specs* mirror parameter specs so the sharding rules apply to
+optimizer state unchanged (ZeRO-style: state shards wherever params shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import spec as spec_mod
+from ..models.spec import ParamSpec
+
+
+class Optimizer(NamedTuple):
+    name: str
+    state_specs: Callable[[Any], Any]          # param_specs -> state specs
+    apply: Callable[..., Tuple[Any, Any]]      # (params,grads,state,lr,step)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    # scale in the grad's own dtype: an f32 round-trip materializes an fp32
+    # copy of every grad leaf (tens of GB for the 1T MoE)
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def _map_leaves(fn, params, grads, state):
+    """Recurse param/grad/state dicts in lockstep; state subtree per leaf.
+    Returns (new_params, new_state)."""
+    if isinstance(params, dict):
+        out = {k: _map_leaves(fn, params[k], grads[k], state[k])
+               for k in params}
+        return ({k: v[0] for k, v in out.items()},
+                {k: v[1] for k, v in out.items()})
+    return _chunked(fn, params, grads, state)
+
+
+def _chunked(fn, p, g, st):
+    """Apply an elementwise update per slice of the leading (layer-stack)
+    axis via lax.map. Without this, fp32 temporaries materialize for whole
+    stacked leaves — for the 1T MoE that is tens of GB per leaf (the update
+    math touches only the trailing axes, so slicing axis 0 is exact)."""
+    if hasattr(p, "ndim") and p.ndim >= 3 and p.shape[0] > 1:
+        return jax.lax.map(lambda args: fn(*args), (p, g, st))
+    return fn(p, g, st)
+
+
+# --------------------------------- AdamW ---------------------------------- #
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype: str = "float32"
+          ) -> Optimizer:
+    def state_specs(param_specs):
+        def f(path, s: ParamSpec):
+            z = dataclasses.replace(s, init="zeros", dtype=moment_dtype)
+            return {"m": z, "v": z}
+        return spec_mod.map_specs(f, param_specs)
+
+    def apply(params, grads, state, lr, step):
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+        md = jnp.dtype(moment_dtype)
+
+        def upd(p, g, st):
+            gf = g.astype(jnp.float32)
+            m = b1 * st["m"].astype(jnp.float32) + (1 - b1) * gf
+            v = b2 * st["v"].astype(jnp.float32) + (1 - b2) * gf * gf
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (u + weight_decay * pf)
+            return pf.astype(p.dtype), {"m": m.astype(md), "v": v.astype(md)}
+
+        return _map_leaves(upd, params, grads, state)
+
+    return Optimizer("adamw", state_specs, apply)
+
+
+# ------------------------------- Adafactor -------------------------------- #
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments for >=2-D params; scalars/vectors keep a full
+    second moment. No first moment."""
+
+    def state_specs(param_specs):
+        def f(path, s: ParamSpec):
+            if len(s.shape) >= 2:
+                return {
+                    "vr": ParamSpec(s.shape[:-1], s.axes[:-1], init="zeros",
+                                    dtype="float32"),
+                    "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                    s.axes[:-2] + s.axes[-1:], init="zeros",
+                                    dtype="float32"),
+                }
+            return {"v": ParamSpec(s.shape, s.axes, init="zeros",
+                                   dtype="float32")}
+        return spec_mod.map_specs(f, param_specs)
+
+    def apply(params, grads, state, lr, step):
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - jnp.power(t, -decay)
+
+        def upd(p, g, st):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "v" in st:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v}
+            else:
+                vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                vhat = (vr / denom)[..., None] * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(vhat + eps)
+                new_st = {"vr": vr, "vc": vc}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (u + weight_decay * pf)
+            return pf.astype(p.dtype), new_st
+
+        return _map_leaves(upd, params, grads, state)
+
+    return Optimizer("adafactor", state_specs, apply)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    raise ValueError(f"unknown optimizer {name}")
+
+
+# ------------------------------- schedules -------------------------------- #
+
+def cosine_schedule(peak_lr: float = 3e-4, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+    return lr

@@ -1,0 +1,67 @@
+"""Ambient activation-sharding context.
+
+Models are mesh-agnostic; the launcher (train/serve/dryrun) installs a
+(mesh, rules) context and model code calls ``constrain(x, *logical_axes)``
+at activation boundaries (e.g. the layer-scan carry). Logical activation
+axes resolve through the same rules table as parameters:
+
+    'act_batch' -> ('pod','data')     data parallel
+    'act_seq'   -> 'model'            Megatron-style sequence parallelism
+                                      (the layer carry is the saved
+                                      activation; sharding it over 'model'
+                                      divides checkpoint memory by TP width)
+
+No-op when no context is installed (pure single-device execution).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current() -> Optional[Tuple[Mesh, Dict[str, Any]]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Dict[str, Any]):
+    prev = _current()
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint(x, rules[axes]) if a context is
+    installed and every sharded dim divides evenly; otherwise identity."""
+    ctx = _current()
+    if ctx is None or x is None:
+        return x
+    mesh, rules = ctx
+    from .sharding import _axis_size  # local import to avoid cycle
+    spec = []
+    used = set()
+    for dim, name in zip(x.shape, logical_axes):
+        axis = rules.get(name) if name else None
+        if isinstance(axis, (tuple, list)):       # drop already-used axes
+            axis = tuple(a for a in axis if a not in used) or None
+            if axis is not None and len(axis) == 1:
+                axis = axis[0]
+        elif axis in used:
+            axis = None
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None
+        if axis is not None:
+            used.update(axis if isinstance(axis, tuple) else (axis,))
+        spec.append(axis)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,104 @@
+"""Roofline-term extraction from compiled XLA artifacts (DESIGN.md §7).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (constants from the brief).
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_operand_bytes / (chips * ICI_BW)
+
+``cost_analysis()`` yields per-partition FLOPs/bytes for SPMD modules, so
+``chips`` divides only the collective term (whose bytes we parse from the
+full HLO).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")[.(\s-]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output-shape bytes of every collective op, by op kind."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+    return out
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_total: float, chips: int) -> Dict[str, Any]:
+    compute = flops_per_chip / PEAK_FLOPS
+    memory = bytes_per_chip / HBM_BW
+    collective = coll_bytes_total / (chips * ICI_BW)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    total = max(compute, memory, collective)
+    terms["bound_s"] = total
+    # fraction of the roofline the dominant term would allow if perfectly
+    # overlapped with the others
+    terms["flops_per_chip"] = flops_per_chip
+    terms["bytes_per_chip"] = bytes_per_chip
+    terms["collective_bytes"] = coll_bytes_total
+    return terms
+
+
+def model_flops(n_active_params: int, n_tokens: int,
+                kind: str = "train") -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * n_tokens
+
+
+def summarize(cost: Optional[Dict[str, float]], hlo_text: str, chips: int,
+              n_active_params: int, n_tokens: int, kind: str
+              ) -> Dict[str, Any]:
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    byts = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    coll = collective_bytes(hlo_text)
+    coll_total = float(sum(coll.values()))
+    terms = roofline_terms(flops, byts, coll_total, chips)
+    mf = model_flops(n_active_params, n_tokens, kind)
+    terms["model_flops_total"] = mf
+    terms["model_flops_per_chip"] = mf / chips
+    terms["useful_flops_ratio"] = (mf / chips) / flops if flops else 0.0
+    terms["collective_breakdown"] = coll
+    return terms

@@ -1,0 +1,138 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §5).
+
+One rules table drives params, optimizer state, caches and activations:
+  * TP: q_heads / kv_heads / ffn / vocab / experts / mamba-inner -> 'model'
+  * FSDP (ZeRO-3): the 'embed' axis of weights -> 'data' (XLA all-gathers
+    per layer inside the scan, reduce-scatters grads)
+  * DP: 'batch' -> ('pod', 'data') on the multi-pod mesh
+  * SP: 'kv_seq' -> 'data' for single-sequence long-context decode
+Head counts not divisible by the model axis use GSPMD padding (visible in the
+roofline useful-FLOPs ratio; a hillclimb lever).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import spec as spec_mod
+
+# Default logical-axis rules (mesh axes: pod?, data, model).
+DEFAULT_RULES: Dict[str, Optional[Any]] = {
+    # weights
+    "embed": "data",            # FSDP shard of the model dim
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "experts": "model",         # EP
+    "experts_r": None,          # router output dim (small)
+    "expert_ffn": None,
+    "layers": None,             # scanned; never sharded
+    # mamba
+    "inner": "model",
+    "inner2": "model",
+    "inner_zxbcdt": "model",
+    "dbc": None,
+    "dt_rank": None,
+    "state": None,
+    "conv": None,
+    "heads": "model",
+    # activations / caches
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "act_batch": ("pod", "data"),   # activation constraints (ctx.constrain)
+    "act_seq": "model",             # Megatron-style sequence parallelism
+}
+
+
+def make_rules(mesh: Mesh, overrides: Optional[Dict[str, Any]] = None,
+               shape_kind: str = "train",
+               global_batch: Optional[int] = None) -> Dict[str, Any]:
+    rules = dict(DEFAULT_RULES)
+    axes = mesh.axis_names
+    if "pod" not in axes:
+        rules["batch"] = ("data",)
+        rules["act_batch"] = ("data",)
+    else:
+        # multi-pod: ZeRO-3 over pod x data — params/opt-state/grads shard
+        # over both (the 1T MoE needs 512-way weight sharding: params+grads
+        # alone exceed a 16 GB chip at 256-way). The per-layer all-gather
+        # over 'pod' crosses the DCN but overlaps with layer compute.
+        rules["embed"] = ("data", "pod")
+    if shape_kind == "decode":
+        # KV caches: kv-head counts (4-8) rarely divide the 16-way model
+        # axis, so shard the cache SEQUENCE over 'model' instead
+        # (flash-decoding: per-shard partial attention + online-softmax
+        # combine, which GSPMD emits as small all-reduces of (B,H,1) stats).
+        rules["kv_seq"] = "model"
+    if global_batch is not None:
+        # single-sequence long-context decode: batch unshardable -> sequence
+        # parallelism over BOTH axes
+        dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        if global_batch < dp:
+            rules["batch"] = None
+            rules["kv_seq"] = ("data", "model")
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def fit_spec(shape, pspec: P, mesh: Mesh) -> P:
+    """Drop shardings whose axis size does not divide the dimension (e.g.
+    24 q-heads or a 51865 vocab on a 16-way model axis) — the standard
+    logical-rules fallback. jit in_shardings require exact divisibility;
+    configs pad hot dims (vocab) so the fallback stays rare."""
+    out = []
+    used = set()
+    for dim, axis in zip(shape, tuple(pspec) + (None,) * (len(shape)
+                                                          - len(pspec))):
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None
+        names = (axis if isinstance(axis, (tuple, list))
+                 else (axis,) if axis else ())
+        if any(n in used for n in names):      # each mesh axis used once
+            axis = None
+        else:
+            used.update(names)
+        out.append(axis)
+    return P(*out)
+
+
+def named_sharding_tree(spec_tree, mesh: Mesh, rules: Dict[str, Any]):
+    """ParamSpec tree -> NamedSharding tree (validated against the mesh)."""
+    pspecs = spec_mod.partition_tree(spec_tree, rules)
+
+    def build(s, ps):
+        return NamedSharding(mesh, fit_spec(s.shape, ps, mesh))
+    return jax.tree.map(build, spec_tree, pspecs,
+                        is_leaf=lambda x: isinstance(x, (P,
+                                                         spec_mod.ParamSpec)))
+
+
+def batch_sharding(mesh: Mesh, rules: Dict[str, Any]):
+    """Shardings for input batches: leading dim = batch, rest replicated."""
+    b = rules.get("batch")
+
+    def shard_for(ndim: int):
+        return NamedSharding(mesh, P(*((b,) + (None,) * (ndim - 1))))
+    return shard_for
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())

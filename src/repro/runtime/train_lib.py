@@ -1,0 +1,87 @@
+"""Train/serve step builders shared by the launcher, dry-run and tests."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import Model
+from ..models.spec import ParamSpec
+from ..optim import clip_by_global_norm, get_optimizer
+
+
+def state_specs(model: Model, compress: bool = False) -> Dict[str, Any]:
+    """ParamSpec tree for the full train state (params + opt + step
+    [+ error-feedback residuals when gradient compression is on])."""
+    opt = get_optimizer(model.cfg.optimizer)
+    specs = {
+        "params": model.param_specs,
+        "opt": opt.state_specs(model.param_specs),
+        "step": ParamSpec((), (), init="zeros", dtype="int32"),
+    }
+    if compress:
+        from ..optim import compression
+        specs["ef"] = compression.ef_state_specs(model.param_specs)
+    return specs
+
+
+def make_train_step(model: Model,
+                    schedule: Optional[Callable] = None,
+                    grad_clip: float = 1.0,
+                    compress: bool = False) -> Callable:
+    """(state, batch) -> (state, metrics). Pure; jit/pjit it yourself.
+
+    ``compress``: int8 error-feedback gradient compression — the residual
+    buffer lives IN the train state (it must persist across jitted steps).
+    """
+    opt = get_optimizer(model.cfg.optimizer)
+    if schedule is None:
+        schedule = lambda step: jnp.float32(3e-4)       # noqa: E731
+
+    def train_step(state, batch):
+        (loss, mets), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state["params"], batch)
+        new_ef = None
+        if compress:
+            from ..optim import compression
+            grads, new_ef = compression.compress_grads(grads, state["ef"])
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = schedule(state["step"])
+        params, opt_state = opt.apply(state["params"], grads, state["opt"],
+                                      lr, state["step"])
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        if compress:
+            new_state["ef"] = new_ef
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **mets}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"])
+    return decode_step
+
+
+def init_state(model: Model, key: jax.Array,
+               compress: bool = False) -> Dict[str, Any]:
+    from ..models import spec as spec_mod
+    specs = state_specs(model, compress)
+    state = {k: spec_mod.initialize(v, key) if k != "params" else
+             model.init(key) for k, v in specs.items()}
+    state["step"] = jnp.int32(0)
+    return state
+
+
+def abstract_state(model: Model, compress: bool = False) -> Dict[str, Any]:
+    from ..models import spec as spec_mod
+    return spec_mod.abstract(state_specs(model, compress))

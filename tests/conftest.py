@@ -1,0 +1,31 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — unit tests run on the
+single real CPU device; multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int, timeout: int = 420) -> str:
+    """Run python `code` in a subprocess with N fake CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, (
+        f"subprocess failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

@@ -1,0 +1,70 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 16)),
+                       "b": jnp.zeros((16,))},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    cm.save(7, t)
+    step, got = cm.restore()
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    np.testing.assert_array_equal(np.asarray(got["step"]), 7)
+
+
+def test_retention_and_latest(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(s, _tree(s))
+    assert cm.all_steps() == [3, 4]
+    assert cm.latest_step() == 4
+
+
+def test_async_save(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    cm.save(1, _tree(1), blocking=False)
+    cm.wait()
+    assert cm.latest_step() == 1
+
+
+def test_atomicity_marker(tmp_path):
+    """A directory without the COMMITTED marker is invisible."""
+    cm = CheckpointManager(str(tmp_path), keep=3)
+    cm.save(5, _tree())
+    bad = os.path.join(str(tmp_path), "step_0000000009")
+    os.makedirs(bad)
+    assert cm.all_steps() == [5]
+
+
+def test_restore_with_sharding_single_device(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    cm = CheckpointManager(str(tmp_path))
+    t = _tree()
+    cm.save(1, t)
+    sh = {"params": {"w": NamedSharding(mesh, P()),
+                     "b": NamedSharding(mesh, P())},
+          "step": NamedSharding(mesh, P())}
+    _, got = cm.restore(shardings=sh)
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        cm.restore()

@@ -1,0 +1,77 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dominance as dm
+
+
+def test_rps_matrix():
+    d = dm.RPS()
+    assert d.shape == (4, 4)
+    # 1 beats 2, 2 beats 3, 3 beats 1
+    assert d[1, 2] == 1 and d[2, 3] == 1 and d[3, 1] == 1
+    assert d[2, 1] == 0 and d[1, 3] == 0
+    assert np.all(d[0, :] == 0) and np.all(d[:, 0] == 0)
+
+
+def test_rpsls_is_tournament():
+    d = dm.RPSLS()[1:, 1:]
+    # every distinct pair has exactly one winner; no mutual dominance
+    for i in range(5):
+        assert d[i, i] == 0
+        for j in range(i + 1, 5):
+            assert d[i, j] + d[j, i] == 1
+
+
+def test_rpsls_matches_real_game():
+    """The C(5,{1,2}) embedding must reproduce all ten real RPSLS edges."""
+    d = dm.RPSLS()
+    R, S, L, P, K = dm.ROCK, dm.SCISSORS, dm.LIZARD, dm.PAPER, dm.SPOCK
+    wins = [(R, S), (R, L), (P, R), (P, K), (S, P), (S, L), (L, P), (L, K),
+            (K, R), (K, S)]
+    for w, l in wins:
+        assert d[w, l] == 1.0, (w, l)
+        assert d[l, w] == 0.0, (w, l)
+
+
+def test_zhong_ablation():
+    d = dm.zhong_ablated_rpsls()
+    assert d[dm.ROCK, dm.SCISSORS] == 0.0          # removed edge
+    assert d[dm.ROCK, dm.LIZARD] == 1.0            # rest intact
+    assert dm.RPSLS()[dm.ROCK, dm.SCISSORS] == 1.0
+
+
+@given(s=st.integers(2, 12),
+       offs=st.sets(st.integers(1, 11), min_size=1, max_size=4))
+@settings(max_examples=40, deadline=None)
+def test_circulant_rows_are_cyclic_permutations(s, offs):
+    offs = {o % s for o in offs} - {0}
+    if not offs:
+        return
+    d = dm.circulant(s, tuple(offs))[1:, 1:]
+    for i in range(s):
+        assert np.array_equal(np.roll(d[0], i), d[i])
+    assert d.sum() == s * len(offs)
+
+
+def test_csv_roundtrip():
+    d = dm.park_alliance_network(0.3, 0.75, 1.0)
+    d2 = dm.from_csv(dm.to_csv(d))
+    np.testing.assert_allclose(d, d2, atol=1e-6)
+
+
+def test_park_network_structure():
+    d = dm.park_alliance_network(alpha=0.25, beta=0.6, gamma=1.0)
+    m = d[1:, 1:]
+    for i in range(8):
+        assert m[i, (i + 1) % 8] == pytest.approx(1.0)     # gamma ring
+        assert m[i, (i + 2) % 8] == pytest.approx(0.25)    # alliances
+    for i in (0, 2, 4, 6):                                 # beta only in A
+        assert m[i, (i + 4) % 8] == pytest.approx(0.6)
+    for i in (1, 3, 5, 7):
+        assert m[i, (i + 4) % 8] == pytest.approx(0.0)
+
+
+def test_ablate_validates():
+    with pytest.raises(ValueError):
+        dm.ablate(dm.RPS(), [(0, 1)])

@@ -1,0 +1,66 @@
+"""Science replication tests — the paper's validation claims at reduced
+scale (full-scale replications live in benchmarks/ and examples/).
+
+Claims exercised:
+  * Zhong et al. ablated RPSLS: the Paper species goes extinct early
+    (paper: 200-600 MCS at L=200; faster on smaller lattices).
+  * RMF: three-species coexistence below the mobility threshold.
+  * Park et al.: probabilistic-rate model runs and produces survival
+    statistics; mobility extension (companion paper) changes dynamics.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EscgParams, dominance as dm, metrics, simulate
+from repro.core.park import park_params, survival_probabilities
+
+
+@pytest.mark.slow
+def test_zhong_paper_species_extinct_early():
+    p = EscgParams(length=64, height=64, species=5, mobility=1e-4,
+                   mcs=1500, chunk_mcs=250, engine="batched", seed=11)
+    res = simulate(p, dm.zhong_ablated_rpsls(), stop_on_stasis=False)
+    ext = metrics.first_extinction_mcs(res.densities, dm.PAPER)
+    assert 0 < ext <= 1500, f"Paper should die early, got {ext}"
+    # the two sub-cycles persist at this horizon: >=3 species alive
+    alive = (res.densities[-1][1:] > 0).sum()
+    assert alive >= 3
+
+
+@pytest.mark.slow
+def test_rmf_coexistence_low_mobility():
+    p = EscgParams(length=64, height=64, species=3, mobility=3e-5,
+                   empty=0.1, mcs=300, chunk_mcs=100, engine="batched",
+                   seed=5)
+    res = simulate(p, dm.RPS(), stop_on_stasis=False)
+    assert (res.densities[-1][1:] > 0.05).all(), res.densities[-1]
+
+
+@pytest.mark.slow
+def test_sublattice_engine_reproduces_zhong_extinction():
+    """The TPU-native engine shows the same qualitative science."""
+    p = EscgParams(length=64, height=64, species=5, mobility=1e-4,
+                   mcs=1500, chunk_mcs=250, engine="sublattice",
+                   tile=(8, 16), seed=11)
+    res = simulate(p, dm.zhong_ablated_rpsls(), stop_on_stasis=False)
+    ext = metrics.first_extinction_mcs(res.densities, dm.PAPER)
+    assert 0 < ext <= 1500
+
+
+@pytest.mark.slow
+def test_park_model_survival_statistics():
+    ps, hist = survival_probabilities(alpha=0.3, beta=0.75, gamma=1.0,
+                                      L=24, n_trials=4, mcs=150)
+    assert ps.shape == (8,)
+    assert hist.shape == (9,)
+    assert abs(hist.sum() - 1.0) < 1e-6
+    assert (0 <= ps).all() and (ps <= 1).all()
+
+
+def test_park_params_match_paper_protocol():
+    p = park_params(L=100)
+    assert p.species == 8
+    assert p.mcs == 100 * 100            # terminate after L^2 MCS
+    assert p.eps == 0.0                  # no mobility in Park et al.
+    p2 = park_params(L=50, mobility=1e-4)
+    assert p2.eps > 0.0                  # the companion-paper extension

@@ -1,0 +1,94 @@
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EscgParams, dominance as dm, io as io_mod, metrics
+from repro.core import simulate
+from repro.core.simulation import run_trials
+
+
+def test_determinism_same_seed():
+    p = EscgParams(length=20, height=20, species=3, mcs=30, seed=42,
+                   chunk_mcs=10)
+    r1, r2 = simulate(p), simulate(p)
+    np.testing.assert_array_equal(r1.grid, r2.grid)
+    np.testing.assert_array_equal(r1.densities, r2.densities)
+
+
+def test_densities_shape_and_simplex():
+    p = EscgParams(length=16, height=24, species=4, mcs=25, chunk_mcs=10,
+                   empty=0.3, seed=3)
+    r = simulate(p, dm.circulant(4), stop_on_stasis=False)
+    assert r.densities.shape == (26, 5)
+    np.testing.assert_allclose(r.densities.sum(axis=1), 1.0, atol=1e-6)
+    assert r.mcs_completed == 25
+
+
+def test_stasis_early_exit():
+    """Single species + empties: reproduction-only fills the lattice; the
+    run is in stasis from the start (<=1 species alive)."""
+    p = EscgParams(length=10, height=10, species=1, mcs=500, chunk_mcs=50,
+                   empty=0.5, mu=0.0, sigma=1.0, epsilon=0.0, seed=0)
+    r = simulate(p, dm.from_dense(np.zeros((1, 1), np.float32)))
+    assert r.stasis_mcs >= 0
+    assert r.mcs_completed < 500
+
+
+def test_mcs_accounting_paper_alignment():
+    """numRandoms alignment: proposals_per_round is a positive multiple of
+    N (paper: numRandoms = (numRandoms / N) * N)."""
+    p = EscgParams(length=10, height=10, num_randoms=777, max_step=True)
+    assert p.proposals_per_round == 700
+    assert p.mcs_per_round == 7
+    p2 = EscgParams(length=10, height=10, num_randoms=50, max_step=True)
+    assert p2.proposals_per_round == 100          # at least one MCS
+
+
+def test_state_io_roundtrip(tmp_path):
+    p = EscgParams(length=12, height=12, species=5, mcs=10, seed=1)
+    dom = dm.RPSLS()
+    r = simulate(p, dom, stop_on_stasis=False)
+    io_mod.save_state(str(tmp_path), p, r.grid, 10, dom)
+    p2, grid2, mcs2, dom2, _ = io_mod.load_state(str(tmp_path))
+    assert p2 == p
+    assert mcs2 == 10
+    np.testing.assert_array_equal(grid2, r.grid)
+    np.testing.assert_allclose(dom2, dom)
+    # paper CSV grid format round-trips as well
+    g3, m3 = io_mod.import_grid_csv(os.path.join(str(tmp_path), "grid.csv"))
+    np.testing.assert_array_equal(g3, r.grid)
+    assert m3 == 10
+
+
+def test_hooks_called_every_chunk():
+    calls = []
+    p = EscgParams(length=10, height=10, species=3, mcs=30, chunk_mcs=10,
+                   seed=2)
+    simulate(p, hooks=[lambda m, g, c: calls.append((m, c.shape))],
+             stop_on_stasis=False)
+    assert [c[0] for c in calls] == [10, 20, 30]
+    assert all(c[1] == (10, 4) for c in calls)
+
+
+def test_run_trials_vmapped():
+    surv = run_trials(EscgParams(length=12, height=12, species=3, seed=9),
+                      dm.RPS(), n_trials=5, n_mcs=10)
+    assert surv.shape == (5, 3)
+    assert surv.dtype == bool
+    # 10 MCS on a 12x12 RPS grid: everyone still alive
+    assert surv.all()
+
+
+def test_kept_fraction_reported():
+    p = EscgParams(length=16, height=16, species=3, mcs=10, seed=0,
+                   engine="batched", chunk_mcs=10)
+    r = simulate(p, stop_on_stasis=False)
+    assert 0.5 < r.kept_fraction <= 1.0
+
+
+def test_first_extinction_metric():
+    hist = np.array([[0.0, 0.5, 0.5], [0.0, 0.0, 1.0], [0.0, 0.0, 1.0]])
+    assert metrics.first_extinction_mcs(hist, 1) == 1
+    assert metrics.first_extinction_mcs(hist, 2) == -1
