@@ -6,42 +6,75 @@ the E1 sequential oracle (single-threaded baseline), E2 batched (maxStep
 port) and E3 sublattice (TPU-native) engines on CPU at reduced MCS —
 the SPEEDUP STRUCTURE (parallel engines pulling away with L) is the claim
 under test; absolute times are CPU-bound.
+
+The ``sharded`` engine extends the sweep past single-device memory: set
+``ESCG_FAKE_DEVICES=N`` (fake CPU devices) or run on a real multi-chip
+backend, and the largest lattices (the paper's L=3200 point) run
+domain-decomposed with halo exchange, bit-identical to the single-device
+sublattice trajectory.
 """
 from __future__ import annotations
 
+import os
+
+# must happen before the first jax import anywhere in the process
+if os.environ.get("ESCG_FAKE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ["ESCG_FAKE_DEVICES"])
+
 import jax
 
-from repro.core import EscgParams, dominance as dm, simulate
+from repro.core import EscgParams, dominance as dm, engines
 
 from .common import emit, note, time_fn
 
 MCS = 20
 
+ENGINES_SWEPT = ("reference", "batched", "sublattice")
+
+
+def _params(engine: str, L: int) -> EscgParams:
+    tile = (8, 16) if L >= 16 else (4, 8)
+    return EscgParams(length=L, height=L, species=3, mobility=1e-4, mcs=MCS,
+                      chunk_mcs=MCS, engine=engine, tile=tile, seed=0,
+                      empty=0.1)
+
 
 def run_engine(engine: str, L: int) -> float:
-    tile = (8, 16) if L >= 16 else (4, 8)
-    p = EscgParams(length=L, height=L, species=3, mobility=1e-4, mcs=MCS,
-                   chunk_mcs=MCS, engine=engine, tile=tile, seed=0,
-                   empty=0.1)
+    p = _params(engine, L)
     # measure a jitted chunk directly (excludes trace/compile, like the
     # paper excludes process startup)
     from repro.core.simulation import build_chunk_fn
     import jax.numpy as jnp
     from repro.core.lattice import init_grid
     dom = jnp.asarray(dm.RPS())
-    chunk = build_chunk_fn(p, dom)
+    eng = engines.build(p, dom)
+    chunk = build_chunk_fn(p, dom, one_mcs=eng.one_mcs)
     grid = init_grid(jax.random.PRNGKey(0), L, L, 3, 0.1)
+    if eng.grid_sharding is not None:
+        grid = jax.device_put(grid, eng.grid_sharding)
     key = jax.random.PRNGKey(1)
     return time_fn(lambda: chunk(grid, key, MCS), warmup=1, iters=2)
 
 
 def run() -> None:
     note(f"engine scaling, {MCS} MCS per point (paper Fig 4.3/Table 4.1)")
+    n_dev = len(jax.devices())
+    sizes = (32, 64, 128, 256)
+    swept = ENGINES_SWEPT + (("sharded",) if n_dev > 1 else ())
+    if n_dev > 1:
+        note(f"sharded engine over {n_dev} devices "
+             f"(ESCG_FAKE_DEVICES={os.environ.get('ESCG_FAKE_DEVICES', '')})")
+        sizes = sizes + (512,)     # past-single-device point of the sweep
     base = {}
-    for L in (32, 64, 128, 256):
-        for engine in ("reference", "batched", "sublattice"):
+    for L in sizes:
+        for engine in swept:
             if engine == "reference" and L > 128:
                 continue               # the paper's baseline also tops out
+            if engine != "sharded" and L > 256:
+                continue               # largest size: sharded only
             t = run_engine(engine, L)
             upd = MCS * L * L / t
             base[(engine, L)] = t

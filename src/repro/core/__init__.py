@@ -1,11 +1,15 @@
 """Core ESCG engine — the paper's contribution as a composable JAX module."""
-from . import batched, dominance, io, lattice, metrics, park, reference
-from . import rng, rules, simulation, sublattice
+from . import batched, dominance, engines, io, lattice, metrics, park
+from . import reference, rng, rules, simulation, sublattice
+from .engines import BuiltEngine, EngineCaps, EngineSpec, engine_names
+from .engines import engine_specs, get_engine, register
 from .params import ENGINES, EscgParams
 from .simulation import SimResult, run_trials, simulate
 
 __all__ = [
     "EscgParams", "ENGINES", "SimResult", "simulate", "run_trials",
-    "batched", "dominance", "io", "lattice", "metrics", "park",
+    "BuiltEngine", "EngineCaps", "EngineSpec", "engine_names",
+    "engine_specs", "get_engine", "register",
+    "batched", "dominance", "engines", "io", "lattice", "metrics", "park",
     "reference", "rng", "rules", "simulation", "sublattice",
 ]

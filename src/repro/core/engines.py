@@ -1,0 +1,249 @@
+"""First-class engine registry (DESIGN.md §2, grown multi-device).
+
+Every update engine registers a builder plus capability metadata here;
+``simulation.simulate`` / ``run_trials`` and the CLI resolve engines through
+this table instead of an if/elif ladder. Adding an engine is one
+``@register(...)`` decorator — params validation, CLI choices and the
+README engine matrix all follow automatically.
+
+Engine contract: ``build(params, dom) -> BuiltEngine`` where
+``one_mcs(grid, key) -> (grid, kept, attempts)`` advances one Monte-Carlo
+step (N elementary updates) fully on-device. ``grid_sharding`` is non-None
+for multi-device engines: the driver ``device_put``s the lattice onto it
+before the first chunk and every array op thereafter stays device-resident.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from . import batched as batched_mod
+from . import reference as reference_mod
+from . import sublattice as sublattice_mod
+from .rng import proposal_batch, round_shift, tile_stream_batch
+
+if TYPE_CHECKING:  # avoid a runtime cycle: params validates via this module
+    from .params import EscgParams
+
+
+class BuiltEngine(NamedTuple):
+    """A ready-to-run engine instance for one (params, dominance) pair."""
+    one_mcs: Callable[[jax.Array, jax.Array],
+                      Tuple[jax.Array, jax.Array, jax.Array]]
+    grid_sharding: Optional[jax.sharding.Sharding] = None
+
+
+@dataclass(frozen=True)
+class EngineCaps:
+    """Static capability metadata, consumed by params validation, the
+    trial runner and the docs engine matrix."""
+    flux_only: bool = False    # requires periodic (torus) boundaries
+    tiled: bool = False        # consumes params.tile; tile must divide grid
+    multi_device: bool = False  # domain-decomposed across jax.devices()
+    vmappable: bool = True     # usable under vmap (run_trials pod axis)
+    description: str = ""
+    paper: str = ""            # paper algorithm / figure it reproduces
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    name: str
+    caps: EngineCaps
+    build: Callable[["EscgParams", jax.Array], BuiltEngine] = field(
+        repr=False, default=None)
+
+
+_REGISTRY: Dict[str, EngineSpec] = {}
+
+
+def register(name: str, caps: EngineCaps):
+    """Decorator: register ``build(params, dom) -> BuiltEngine`` under
+    ``name``. Re-registration replaces (supports hot reload in notebooks)."""
+    def deco(build_fn):
+        _REGISTRY[name] = EngineSpec(name=name, caps=caps, build=build_fn)
+        return build_fn
+    return deco
+
+
+def engine_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def engine_specs() -> Tuple[EngineSpec, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def get_engine(name: str) -> EngineSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {engine_names()}"
+        ) from None
+
+
+def validate_params(p: "EscgParams") -> None:
+    """Capability-driven validation (called from EscgParams.validate)."""
+    spec = get_engine(p.engine)
+    if spec.caps.flux_only and not p.flux:
+        raise ValueError(
+            f"engine {p.engine!r} requires flux (periodic) boundaries; "
+            "use reference/batched for reflecting boundaries")
+    if spec.caps.tiled:
+        th, tw = p.tile
+        if th < 3 or tw < 3:
+            raise ValueError("tile dims must be >= 3 (need interior)")
+        if p.height % th or p.length % tw:
+            raise ValueError(f"tile {p.tile} must divide lattice "
+                             f"{p.height}x{p.length}")
+    if spec.caps.multi_device and p.shard_grid is not None:
+        dr, dc = p.shard_grid
+        if dr < 1 or dc < 1:
+            raise ValueError("shard_grid dims must be >= 1")
+
+
+def build(params: "EscgParams", dom: jax.Array) -> BuiltEngine:
+    """Resolve ``params.engine`` and build its one-MCS function."""
+    return get_engine(params.engine).build(params, dom)
+
+
+# --------------------------- registered engines --------------------------- #
+
+def _pick_sub_batches(n: int, want: int = 8) -> int:
+    for d in (want, 4, 2, 1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _tiled_setup(p: "EscgParams"):
+    """Shared tile bookkeeping for the sublattice-family engines."""
+    th, tw = p.tile
+    n_tiles = (p.height // th) * (p.length // tw)
+    k_per_tile = max(1, math.ceil(p.n_cells / n_tiles))
+    interior = (th - 2) * (tw - 2)
+    return th, tw, n_tiles, k_per_tile, interior
+
+
+@register("reference", EngineCaps(
+    description="sequential oracle; one proposal at a time via lax.scan",
+    paper="Algorithm 3.2/3.3 (single-threaded baseline)"))
+def _build_reference(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
+    t_eps, t_eps_mu = p.action_thresholds()
+    n = p.n_cells
+
+    def one_mcs(grid, key):
+        batch = proposal_batch(key, n, n, p.neighbourhood)
+        grid, kept = reference_mod.run_proposals(
+            grid, batch, t_eps, t_eps_mu, dom, p.flux)
+        return grid, kept, jnp.int32(n)
+    return BuiltEngine(one_mcs)
+
+
+@register("batched", EngineCaps(
+    description="scatter-min conflict arbitration over proposal sub-batches",
+    paper="Algorithm 3.5/3.6 (CUDA port, E2)"))
+def _build_batched(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
+    t_eps, t_eps_mu = p.action_thresholds()
+    n = p.n_cells
+    n_sub = _pick_sub_batches(n)
+    b_sub = n // n_sub
+
+    def one_mcs(grid, key):
+        def body(carry, k):
+            g, kept = carry
+            batch = proposal_batch(k, b_sub, n, p.neighbourhood)
+            g, k2 = batched_mod.run_proposals(
+                g, batch, t_eps, t_eps_mu, dom, p.flux)
+            return (g, kept + k2), None
+        keys = jax.random.split(key, n_sub)
+        (grid, kept), _ = jax.lax.scan(body, (grid, jnp.int32(0)), keys)
+        return grid, kept, jnp.int32(n)
+    return BuiltEngine(one_mcs)
+
+
+def _build_tiled(p: "EscgParams", dom: jax.Array, run_round) -> BuiltEngine:
+    """Shared builder for the shifted-window engines (jnp and Pallas).
+
+    Proposals come from per-tile counter-based streams (tile_stream_batch),
+    so the trajectory is a function of (key, tile id) only — the sharded
+    engine regenerates identical streams shard-locally and stays
+    bit-identical to this single-device path.
+
+    §Perf H3 iter-1: never roll back. Densities / survival statistics are
+    translation-invariant on the torus, so the lattice frame is allowed to
+    drift by the accumulated shift (composition of uniform shifts stays
+    uniform). Halves the roll traffic per round.
+    """
+    th, tw, n_tiles, k_per_tile, interior = _tiled_setup(p)
+    tile_ids = jnp.arange(n_tiles, dtype=jnp.int32)
+
+    def one_mcs(grid, key):
+        kp, ks = jax.random.split(key)
+        props = tile_stream_batch(kp, tile_ids, k_per_tile, interior,
+                                  p.neighbourhood)
+        shift = round_shift(ks, th, tw)
+        grid = run_round(grid, props, shift, dom=dom)
+        attempts = jnp.int32(n_tiles * k_per_tile)
+        return grid, attempts, attempts
+    return BuiltEngine(one_mcs)
+
+
+@register("sublattice", EngineCaps(
+    flux_only=True, tiled=True,
+    description="shifted-window synchronous sublattice, pure jnp (E3)",
+    paper="maxStep §4.2.4 redesigned for tiles (Fig 4.3)"))
+def _build_sublattice(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
+    t_eps, t_eps_mu = p.action_thresholds()
+    run_round = partial(sublattice_mod.run_round, tile_shape=p.tile,
+                        t_eps=t_eps, t_eps_mu=t_eps_mu, roll_back=False)
+    return _build_tiled(p, dom, run_round)
+
+
+@register("pallas", EngineCaps(
+    flux_only=True, tiled=True,
+    description="sublattice round as a Pallas TPU kernel (VMEM-resident)",
+    paper="maxStep §4.2.4, kernelized (Fig 4.3)"))
+def _build_pallas(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
+    from ..kernels import ops as kernel_ops  # lazy: avoid cycles
+    t_eps, t_eps_mu = p.action_thresholds()
+    run_round = partial(kernel_ops.escg_round, tile_shape=p.tile,
+                        t_eps=t_eps, t_eps_mu=t_eps_mu, roll_back=False)
+    return _build_tiled(p, dom, run_round)
+
+
+@register("pallas_fused", EngineCaps(
+    flux_only=True, tiled=True,
+    description="Pallas kernel with in-kernel Philox proposal derivation "
+                "(zero proposal HBM traffic)",
+    paper="numRandoms buffer §3.2.1 eliminated (Fig 4.2)"))
+def _build_pallas_fused(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
+    from ..kernels import ops as kernel_ops  # lazy: avoid cycles
+    t_eps, t_eps_mu = p.action_thresholds()
+    th, tw, n_tiles, k_per_tile, _ = _tiled_setup(p)
+
+    def one_mcs(grid, key):
+        # per-MCS Philox key = the raw PRNG key words; round_idx = 0
+        seed = jax.random.key_data(key).astype(jnp.uint32)[-2:]
+        shift = round_shift(jax.random.fold_in(key, 1), th, tw)
+        grid = kernel_ops.escg_round_fused(
+            grid, seed, jnp.uint32(0), shift, dom, p.tile, k_per_tile,
+            t_eps, t_eps_mu, p.neighbourhood, roll_back=False)
+        attempts = jnp.int32(n_tiles * k_per_tile)
+        return grid, attempts, attempts
+    return BuiltEngine(one_mcs)
+
+
+@register("sharded", EngineCaps(
+    flux_only=True, tiled=True, multi_device=True, vmappable=False,
+    description="domain-decomposed across devices: shard_map + ppermute "
+                "halo exchange, per-tile Philox streams, psum stasis counts",
+    paper="size scaling beyond one device (Fig 4.3, L=3200)"))
+def _build_sharded(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
+    from . import sharded as sharded_mod  # lazy: pulls parallel/ helpers
+    return sharded_mod.build_engine(p, dom)

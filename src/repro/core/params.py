@@ -14,9 +14,12 @@ import json
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
-# Update engines (DESIGN.md §2).
-ENGINES = ("reference", "batched", "sublattice", "pallas",
-           "pallas_fused")
+from .engines import engine_names, validate_params as _validate_engine
+
+# Update engines (DESIGN.md §2) — defined by the registry in engines.py.
+# Back-compat alias; prefer engines.engine_names() which tracks late
+# registrations.
+ENGINES = engine_names()
 
 
 @dataclass(frozen=True)
@@ -41,12 +44,15 @@ class EscgParams:
     sigma: float = 1.0             # reproduction
     epsilon: Optional[float] = None  # migration; default 2*M*N (paper)
     # ---- TPU adaptation knobs ----
-    engine: str = "batched"        # one of ENGINES
+    engine: str = "batched"        # any registered engine (engines.py)
     cell_dtype: str = "int32"      # int8 quarters lattice HBM traffic
     tile: Tuple[int, int] = (8, 32)   # sublattice tile (th, tw)
     seed: int = 0
     chunk_mcs: int = 100           # MCS per jitted chunk (device-resident loop)
     out_dir: str = "escg_out"
+    # sharded engine: (rows, cols) device grid; None = auto-factor all
+    # local devices (parallel.sharding.auto_shard_grid)
+    shard_grid: Optional[Tuple[int, int]] = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -88,8 +94,6 @@ class EscgParams:
     def validate(self) -> "EscgParams":
         if self.neighbourhood not in (4, 8):
             raise ValueError("neighbourhood must be 4 or 8")
-        if self.engine not in ENGINES:
-            raise ValueError(f"engine must be one of {ENGINES}")
         if self.species < 1:
             raise ValueError("species >= 1")
         if not (0.0 <= self.empty <= 1.0):
@@ -100,14 +104,9 @@ class EscgParams:
             raise ValueError("cell_dtype must be int8/int16/int32")
         if self.cell_dtype == "int8" and self.species > 127:
             raise ValueError("int8 lattice supports <= 127 species")
-        if self.engine in ("sublattice", "pallas", "pallas_fused"):
-            th, tw = self.tile
-            if th < 3 or tw < 3:
-                raise ValueError("tile dims must be >= 3 (need interior)")
-            if self.height % th or self.length % tw:
-                raise ValueError(
-                    f"tile {self.tile} must divide lattice "
-                    f"{self.height}x{self.length}")
+        # engine existence + capability checks (flux, tile, devices) live
+        # with the registry so new engines carry their own constraints
+        _validate_engine(self)
         return self
 
     # ------------------------------ io -------------------------------- #
@@ -118,6 +117,8 @@ class EscgParams:
     def from_json(s: str) -> "EscgParams":
         d = json.loads(s)
         d["tile"] = tuple(d["tile"])
+        if d.get("shard_grid") is not None:
+            d["shard_grid"] = tuple(d["shard_grid"])
         return EscgParams(**d)
 
     def replace(self, **kw) -> "EscgParams":
@@ -145,10 +146,15 @@ def add_cli_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--mu", type=float, default=1.0)
     p.add_argument("--sigma", type=float, default=1.0)
     p.add_argument("--epsilon", type=float, default=None)
-    p.add_argument("--engine", type=str, default="batched", choices=ENGINES)
+    p.add_argument("--engine", type=str, default="batched",
+                   choices=engine_names())
     p.add_argument("--cellDtype", dest="cell_dtype", type=str,
                    default="int32", choices=("int8", "int16", "int32"))
     p.add_argument("--tile", type=int, nargs=2, default=(8, 32))
+    p.add_argument("--shardGrid", dest="shard_grid", type=int, nargs=2,
+                   default=None,
+                   help="(rows, cols) device grid for engine=sharded; "
+                        "omit to auto-factor all local devices")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--chunkMcs", dest="chunk_mcs", type=int, default=100)
     p.add_argument("--outDir", dest="out_dir", type=str, default="escg_out")
@@ -159,4 +165,6 @@ def params_from_args(args: argparse.Namespace) -> EscgParams:
     kw = {k: v for k, v in vars(args).items() if k in fields and v is not None}
     if "tile" in kw:
         kw["tile"] = tuple(kw["tile"])
+    if kw.get("shard_grid") is not None:
+        kw["shard_grid"] = tuple(kw["shard_grid"])
     return EscgParams(**kw).validate()

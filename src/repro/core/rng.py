@@ -57,6 +57,31 @@ def tile_proposal_batch(key: jax.Array, n_tiles: int, k_per_tile: int,
     )
 
 
+def tile_stream_batch(key: jax.Array, tile_ids: jax.Array, k_per_tile: int,
+                      interior: int, neighbourhood: int) -> ProposalBatch:
+    """Per-tile counter-based proposal streams: tile ``t``'s draws depend
+    only on ``(key, global tile id)``, never on how tiles are grouped onto
+    devices. This is what makes the sharded engine bit-identical to the
+    single-device sublattice engine for ANY shard layout — each shard
+    regenerates exactly the streams of the tiles it owns (the sPEGG /
+    counter-based-PRNG idiom; no cross-device RNG state).
+
+    ``tile_ids``: int array of global tile ids; returns (len(tile_ids), K)
+    arrays in the same order.
+    """
+    def one(tid):
+        k1, k2, k3, k4 = jax.random.split(jax.random.fold_in(key, tid), 4)
+        return ProposalBatch(
+            cell=jax.random.randint(k1, (k_per_tile,), 0, interior,
+                                    dtype=jnp.int32),
+            dirn=jax.random.randint(k2, (k_per_tile,), 0, neighbourhood,
+                                    dtype=jnp.int32),
+            u_act=jax.random.uniform(k3, (k_per_tile,), dtype=jnp.float32),
+            u_dom=jax.random.uniform(k4, (k_per_tile,), dtype=jnp.float32),
+        )
+    return jax.vmap(one)(jnp.asarray(tile_ids, jnp.int32))
+
+
 def round_shift(key: jax.Array, th: int, tw: int) -> jax.Array:
     """Uniform torus shift (dy, dx) in [0,th) x [0,tw) for one sublattice
     round (Shim-Amar randomized sublattice origin)."""

@@ -1,42 +1,181 @@
-"""Multi-device ESCG: 2-D spatial domain decomposition (DESIGN.md §5).
+"""Multi-device ESCG: 2-D spatial domain decomposition with explicit halo
+exchange (DESIGN.md §5; the ROADMAP "sharding" north-star).
 
-The lattice shards as P('data', 'model') — a (16 x 16) pod holds a 256-tile
-device grid. One round:
+The lattice shards as P('rows', 'cols') over a device grid (dr, dc). One
+round, entirely inside a single ``shard_map`` region:
 
-  1. ``jnp.roll`` by the random sublattice shift at the pjit level — GSPMD
-     moves only the wrapped slivers between neighbouring devices
-     (collective-permute of O(shift x perimeter) bytes, NOT a halo exchange
-     per elementary step);
-  2. ``shard_map`` local update: every device runs the same per-tile
-     sequential sweeps as the single-device engine on its local block.
-     Because proposals are restricted to tile interiors and device blocks
-     are unions of tiles, no device ever writes another device's cells —
-     the engine is communication-free inside a round by construction;
-  3. roll back (optional — densities are translation-invariant, so
-     production keeps the accumulated shift and only unrolls for
-     snapshots; see §Perf).
+  1. **halo exchange**: the random sublattice shift (dy, dx) in
+     [0,th) x [0,tw) is realized as a static-size halo — each device
+     ``ppermute``s its first ``th`` rows (resp. ``tw`` cols) to the
+     neighbouring device and dynamic-slices the shifted window out of the
+     extended block. O(halo x perimeter) bytes per round, never a
+     whole-lattice gather. (A global ``jnp.roll`` on the shard_map output
+     miscompiles under jit on jax 0.4.x — values get summed across the
+     device axis — so the roll MUST stay inside the shard_map region; see
+     tests/test_sharded_engine.py.)
+  2. **local update**: every device regenerates the per-tile Philox
+     proposal streams for exactly the tiles it owns
+     (``rng.tile_stream_batch`` keyed by global tile id) and runs the same
+     per-tile sequential sweeps as the single-device engine. Proposals are
+     restricted to tile interiors and device blocks are unions of tiles,
+     so no device ever writes another device's cells — communication-free
+     by construction, no atomics.
+  3. the shift is accumulated, not rolled back (densities are
+     translation-invariant; same policy as the sublattice engine).
 
-Bit-exactness: a sharded round equals the single-device
-``sublattice.run_round`` with identical proposals (tests/test_sharded.py
-runs this equality on a subprocess-faked 16-device mesh).
-
-The 'pod' axis carries vmapped IID trials — the paper's statistics problem
-(2000 independent runs, §4.3.2) sharded across pods.
+Because the streams are keyed by global tile id, a sharded run is
+**bit-identical to the single-device sublattice engine for ANY shard
+layout** — (1,1), (2,2), (4,1), ... all produce the same trajectory. The
+population counts the stasis early-exit consumes are computed on the
+sharded lattice at the jit level; XLA lowers them to per-shard partial
+bincounts + an all-reduce (the cross-device population reduction).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .rng import ProposalBatch
+from .engines import BuiltEngine, _tiled_setup
+from .rng import ProposalBatch, round_shift, tile_stream_batch
 from .sublattice import from_tiles, tile_update, to_tiles
 
+
+# ------------------------- halo-exchange primitive ------------------------ #
+
+def halo_roll(local: jax.Array, s: jax.Array, halo: int, axis_name: str,
+              axis: int, n_shards: int, reverse: bool = False) -> jax.Array:
+    """Distributed torus roll by a dynamic shift, via static-size halos.
+
+    Rolls the GLOBAL lattice by ``-s`` (or ``+s`` when ``reverse``) along
+    ``axis``, operating on the local block inside a shard_map region.
+    Requires ``0 <= s < halo <= local block extent``: the wrapped sliver
+    then crosses exactly one shard boundary, so a single ppermute of a
+    static ``halo``-sized slab suffices; the dynamic part is a local
+    dynamic_slice.
+    """
+    extent = local.shape[axis]
+    if n_shards == 1:
+        return jnp.roll(local, s if reverse else -s, axis)
+    if not reverse:
+        # new_local[i] = old[i][s:] ++ old[i+1][:s]
+        head = lax.slice_in_dim(local, 0, halo, axis=axis)
+        recv = lax.ppermute(head, axis_name,
+                            [(i, (i - 1) % n_shards)
+                             for i in range(n_shards)])
+        ext = jnp.concatenate([local, recv], axis=axis)
+        return lax.dynamic_slice_in_dim(ext, s, extent, axis=axis)
+    # new_local[i] = old[i-1][B-s:] ++ old[i][:B-s]
+    tail = lax.slice_in_dim(local, extent - halo, extent, axis=axis)
+    recv = lax.ppermute(tail, axis_name,
+                        [(i, (i + 1) % n_shards) for i in range(n_shards)])
+    ext = jnp.concatenate([recv, local], axis=axis)
+    return lax.dynamic_slice_in_dim(ext, halo - s, extent, axis=axis)
+
+
+def shard_shift2d(local: jax.Array, shift: jax.Array,
+                  tile_shape: Tuple[int, int], shard_grid: Tuple[int, int],
+                  row_axis: str = "rows", col_axis: str = "cols",
+                  reverse: bool = False) -> jax.Array:
+    """Apply (or undo) the round's 2-D torus shift inside shard_map."""
+    th, tw = tile_shape
+    dr, dc = shard_grid
+    local = halo_roll(local, shift[0], th, row_axis, 0, dr, reverse)
+    local = halo_roll(local, shift[1], tw, col_axis, 1, dc, reverse)
+    return local
+
+
+# ------------------------------ local round ------------------------------- #
+
+def _local_tile_ids(block_shape: Tuple[int, int],
+                    tile_shape: Tuple[int, int], gw: int,
+                    row_axis: str, col_axis: str) -> jax.Array:
+    """Global tile ids (raster order) of the tiles this shard owns."""
+    th, tw = tile_shape
+    lgh, lgw = block_shape[0] // th, block_shape[1] // tw
+    ri = lax.axis_index(row_axis)
+    ci = lax.axis_index(col_axis)
+    rows = ri * lgh + jnp.arange(lgh, dtype=jnp.int32)
+    cols = ci * lgw + jnp.arange(lgw, dtype=jnp.int32)
+    return (rows[:, None] * gw + cols[None, :]).reshape(-1)
+
+
+def _update_tiles(local: jax.Array, props: ProposalBatch,
+                  tile_shape: Tuple[int, int], t_eps: float, t_eps_mu: float,
+                  dom: jax.Array) -> jax.Array:
+    th, tw = tile_shape
+    tiles = to_tiles(local, th, tw)
+    upd = jax.vmap(lambda t, c, d, a, u: tile_update(
+        t, ProposalBatch(c, d, a, u), t_eps, t_eps_mu, dom))
+    tiles = upd(tiles, props.cell, props.dirn, props.u_act, props.u_dom)
+    return from_tiles(tiles, local.shape[0], local.shape[1])
+
+
+# ----------------------------- engine builder ----------------------------- #
+
+def lattice_sharding(mesh: Mesh, row_axis: str = "rows",
+                     col_axis: str = "cols") -> NamedSharding:
+    return NamedSharding(mesh, P(row_axis, col_axis))
+
+
+def build_engine(params, dom: jax.Array,
+                 mesh: Optional[Mesh] = None,
+                 row_axis: str = "rows",
+                 col_axis: str = "cols") -> BuiltEngine:
+    """Registry builder for engine='sharded'.
+
+    ``mesh`` defaults to a lattice mesh over all local devices, shaped by
+    ``params.shard_grid`` (auto-factored when None; see
+    parallel.sharding.lattice_mesh).
+    """
+    from ..parallel.sharding import lattice_mesh  # lazy: parallel -> models
+
+    p = params.validate()
+    t_eps, t_eps_mu = p.action_thresholds()
+    # same bookkeeping as the single-device tiled engines — the bit-identity
+    # guarantee depends on k_per/interior matching exactly
+    th, tw, n_tiles, k_per, interior = _tiled_setup(p)
+    gh, gw = p.height // th, p.length // tw
+    dom_j = jnp.asarray(dom, jnp.float32)
+
+    if mesh is None:
+        mesh = lattice_mesh(p.shard_grid, p.height, p.length, th, tw,
+                            row_axis=row_axis, col_axis=col_axis)
+    dr, dc = mesh.shape[row_axis], mesh.shape[col_axis]
+    if (p.height // dr) % th or (p.length // dc) % tw:
+        raise ValueError(
+            f"device blocks ({p.height // dr}x{p.length // dc}) must be "
+            f"unions of {th}x{tw} tiles")
+
+    grid_spec = P(row_axis, col_axis)
+
+    def local_round(gl, kp, shift):
+        gl = shard_shift2d(gl, shift, (th, tw), (dr, dc), row_axis, col_axis)
+        tids = _local_tile_ids(gl.shape, (th, tw), gw, row_axis, col_axis)
+        props = tile_stream_batch(kp, tids, k_per, interior, p.neighbourhood)
+        return _update_tiles(gl, props, (th, tw), t_eps, t_eps_mu, dom_j)
+
+    round_fn = shard_map(local_round, mesh=mesh,
+                         in_specs=(grid_spec, P(), P()),
+                         out_specs=grid_spec, check_rep=False)
+
+    def one_mcs(grid, key):
+        kp, ks = jax.random.split(key)
+        shift = round_shift(ks, th, tw)
+        grid = round_fn(grid, kp, shift)
+        attempts = jnp.int32(n_tiles * k_per)
+        return grid, attempts, attempts
+
+    return BuiltEngine(one_mcs, grid_sharding=lattice_sharding(
+        mesh, row_axis, col_axis))
+
+
+# --------------------- explicit-proposal round (tests) -------------------- #
 
 def sharded_run_round(grid: jax.Array, props: ProposalBatch,
                       shift: jax.Array, tile_shape: Tuple[int, int],
@@ -44,9 +183,10 @@ def sharded_run_round(grid: jax.Array, props: ProposalBatch,
                       mesh: Mesh, row_axis: str = "data",
                       col_axis: str = "model",
                       roll_back: bool = True) -> jax.Array:
-    """One shifted-window round on a (H, W) lattice sharded over
-    (row_axis, col_axis). props arrays: (T, K) in global raster tile order.
-    """
+    """One shifted-window round with externally supplied proposals in
+    global raster tile order, shape (T, K). Bit-identical to
+    ``sublattice.run_round`` on the same inputs; jit-safe (all rolls happen
+    inside the shard_map region)."""
     h, w = grid.shape
     th, tw = tile_shape
     gh, gw = h // th, w // tw
@@ -61,53 +201,57 @@ def sharded_run_round(grid: jax.Array, props: ProposalBatch,
     def reshape_props(a):
         return a.reshape(gh, gw, -1)
 
-    def local_update(gl, cell, dirn, ua, ud):
-        tiles = to_tiles(gl, th, tw)
+    def local_round(gl, sh, cell, dirn, ua, ud):
+        gl = shard_shift2d(gl, sh, (th, tw), (dr, dc), row_axis, col_axis)
         k = cell.shape[-1]
-        upd = jax.vmap(lambda t, c, d, a, u: tile_update(
-            t, ProposalBatch(c, d, a, u), t_eps, t_eps_mu, dom))
-        tiles = upd(tiles, cell.reshape(-1, k), dirn.reshape(-1, k),
-                    ua.reshape(-1, k), ud.reshape(-1, k))
-        return from_tiles(tiles, gl.shape[0], gl.shape[1])
+        props_l = ProposalBatch(cell.reshape(-1, k), dirn.reshape(-1, k),
+                                ua.reshape(-1, k), ud.reshape(-1, k))
+        gl = _update_tiles(gl, props_l, (th, tw), t_eps, t_eps_mu, dom)
+        if roll_back:
+            gl = shard_shift2d(gl, sh, (th, tw), (dr, dc), row_axis,
+                               col_axis, reverse=True)
+        return gl
 
     update = shard_map(
-        local_update, mesh=mesh,
-        in_specs=(grid_spec, prop_spec, prop_spec, prop_spec, prop_spec),
-        out_specs=grid_spec)
+        local_round, mesh=mesh,
+        in_specs=(grid_spec, P(), prop_spec, prop_spec, prop_spec,
+                  prop_spec),
+        out_specs=grid_spec, check_rep=False)
 
-    g = jnp.roll(grid, (-shift[0], -shift[1]), (0, 1))
-    g = update(g, reshape_props(props.cell), reshape_props(props.dirn),
-               reshape_props(props.u_act), reshape_props(props.u_dom))
-    if roll_back:
-        g = jnp.roll(g, (shift[0], shift[1]), (0, 1))
-    return g
+    return update(grid, shift, reshape_props(props.cell),
+                  reshape_props(props.dirn), reshape_props(props.u_act),
+                  reshape_props(props.u_dom))
 
 
 def make_sharded_simulation(params, dom, mesh: Mesh,
                             row_axis: str = "data",
-                            col_axis: str = "model"):
-    """Returns (grid_sharding, jitted one_mcs(grid, key) -> grid) for the
-    production mesh. Mirrors simulation.build_mcs_fn for the sharded case."""
-    from . import rng as rngm
+                            col_axis: str = "model",
+                            roll_back: bool = True):
+    """Returns (grid_sharding, jitted one_mcs(grid, key) -> grid) on an
+    explicit mesh — the notebook/driver-facing wrapper.
 
+    Unlike the registered engine (which accumulates the random window
+    shift; densities are translation-invariant), this wrapper rolls the
+    lattice back every MCS by default, so snapshots and spatial analyses
+    of the returned grid stay in the fixed reference frame. Pass
+    ``roll_back=False`` for the cheaper drifting-frame variant.
+    """
     p = params.validate()
-    if p.engine not in ("sublattice", "pallas"):
-        raise ValueError("sharded ESCG uses the sublattice engine")
+    if p.engine not in ("sublattice", "pallas", "sharded"):
+        raise ValueError("sharded ESCG uses a tiled engine")
     t_eps, t_eps_mu = p.action_thresholds()
-    th, tw = p.tile
-    n_tiles = (p.height // th) * (p.length // tw)
-    k_per = max(1, -(-p.n_cells // n_tiles))
-    interior = (th - 2) * (tw - 2)
+    th, tw, n_tiles, k_per, interior = _tiled_setup(p)
     dom_j = jnp.asarray(dom, jnp.float32)
-    grid_sh = NamedSharding(mesh, P(row_axis, col_axis))
+    tile_ids = jnp.arange(n_tiles, dtype=jnp.int32)
 
     @jax.jit
     def one_mcs(grid, key):
         kp, ks = jax.random.split(key)
-        props = rngm.tile_proposal_batch(kp, n_tiles, k_per, interior,
-                                         p.neighbourhood)
-        shift = rngm.round_shift(ks, th, tw)
+        props = tile_stream_batch(kp, tile_ids, k_per, interior,
+                                  p.neighbourhood)
+        shift = round_shift(ks, th, tw)
         return sharded_run_round(grid, props, shift, (th, tw), t_eps,
-                                 t_eps_mu, dom_j, mesh, row_axis, col_axis)
+                                 t_eps_mu, dom_j, mesh, row_axis, col_axis,
+                                 roll_back=roll_back)
 
-    return grid_sh, one_mcs
+    return lattice_sharding(mesh, row_axis, col_axis), one_mcs

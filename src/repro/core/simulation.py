@@ -5,25 +5,27 @@ batch many Monte-Carlo steps per launch. Here a *chunk* of ``chunk_mcs`` MCS
 runs inside one jitted ``lax.scan``; the host only sees per-MCS population
 counts, performs the stasis early-exit (paper §3.2.2), and fires snapshot /
 checkpoint hooks between chunks.
+
+Engine selection is delegated entirely to the registry in ``engines.py``;
+this module never branches on the engine name. For multi-device engines the
+registry hands back a grid sharding: the lattice is placed once and the
+per-MCS population counts (a ``bincount`` over the sharded lattice) lower
+to per-shard partial counts plus an all-reduce, so the stasis early-exit
+sees global populations without ever gathering the grid to one device.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import batched as batched_mod
 from . import dominance as dom_mod
-from . import lattice, metrics
-from . import reference as reference_mod
-from . import sublattice as sublattice_mod
+from . import engines, lattice, metrics
 from .params import EscgParams
-from .rng import proposal_batch, round_shift, tile_proposal_batch
 
 
 @dataclass
@@ -35,106 +37,19 @@ class SimResult:
     kept_fraction: float           # applied / attempted proposals (E2 audit)
 
 
-def _pick_sub_batches(n: int, want: int = 8) -> int:
-    for d in (want, 4, 2, 1):
-        if n % d == 0:
-            return d
-    return 1
+def build_mcs_fn(params: EscgParams, dom: jax.Array):
+    """one_mcs(grid, key) -> (grid, kept, attempts), resolved via the
+    engine registry (back-compat shim; prefer engines.build for access to
+    the grid sharding)."""
+    return engines.build(params, dom).one_mcs
 
 
-def build_mcs_fn(params: EscgParams, dom: jax.Array
-                 ) -> Callable[[jax.Array, jax.Array],
-                               Tuple[jax.Array, jax.Array, jax.Array]]:
-    """Returns one_mcs(grid, key) -> (grid, kept, attempts) for the engine."""
-    p = params
-    t_eps, t_eps_mu = p.action_thresholds()
-    n = p.n_cells
-    h, w = p.height, p.length
-
-    if p.engine == "reference":
-        def one_mcs(grid, key):
-            batch = proposal_batch(key, n, n, p.neighbourhood)
-            grid, kept = reference_mod.run_proposals(
-                grid, batch, t_eps, t_eps_mu, dom, p.flux)
-            return grid, kept, jnp.int32(n)
-        return one_mcs
-
-    if p.engine == "batched":
-        n_sub = _pick_sub_batches(n)
-        b_sub = n // n_sub
-
-        def one_mcs(grid, key):
-            def body(carry, k):
-                g, kept = carry
-                batch = proposal_batch(k, b_sub, n, p.neighbourhood)
-                g, k2 = batched_mod.run_proposals(
-                    g, batch, t_eps, t_eps_mu, dom, p.flux)
-                return (g, kept + k2), None
-            keys = jax.random.split(key, n_sub)
-            (grid, kept), _ = jax.lax.scan(body, (grid, jnp.int32(0)), keys)
-            return grid, kept, jnp.int32(n)
-        return one_mcs
-
-    if p.engine == "pallas_fused":
-        if not p.flux:
-            raise ValueError("pallas_fused requires periodic boundaries")
-        th, tw = p.tile
-        n_tiles = (h // th) * (w // tw)
-        k_per_tile = max(1, math.ceil(n / n_tiles))
-        from ..kernels import ops as kernel_ops  # lazy: avoid cycles
-
-        def one_mcs(grid, key):
-            # per-MCS Philox key = the raw PRNG key words; round_idx = 0
-            seed = jax.random.key_data(key).astype(jnp.uint32)[-2:]
-            shift = round_shift(jax.random.fold_in(key, 1), th, tw)
-            grid = kernel_ops.escg_round_fused(
-                grid, seed, jnp.uint32(0), shift, dom, p.tile, k_per_tile,
-                t_eps, t_eps_mu, p.neighbourhood, roll_back=False)
-            attempts = jnp.int32(n_tiles * k_per_tile)
-            return grid, attempts, attempts
-        return one_mcs
-
-    if p.engine in ("sublattice", "pallas"):
-        if not p.flux:
-            raise ValueError("sublattice/pallas engines require flux "
-                             "(periodic) boundaries; use reference/batched")
-        th, tw = p.tile
-        n_tiles = (h // th) * (w // tw)
-        k_per_tile = max(1, math.ceil(n / n_tiles))
-        interior = (th - 2) * (tw - 2)
-
-        if p.engine == "pallas":
-            from ..kernels import ops as kernel_ops  # lazy: avoid cycles
-            run_round = partial(kernel_ops.escg_round, tile_shape=p.tile,
-                                t_eps=t_eps, t_eps_mu=t_eps_mu,
-                                roll_back=False)
-        else:
-            run_round = partial(sublattice_mod.run_round, tile_shape=p.tile,
-                                t_eps=t_eps, t_eps_mu=t_eps_mu,
-                                roll_back=False)
-
-        # §Perf H3 iter-1: never roll back. Densities / survival statistics
-        # are translation-invariant on the torus, so the lattice frame is
-        # allowed to drift by the accumulated shift (composition of uniform
-        # shifts stays uniform); simulate() unrolls once at the end for
-        # snapshots. Halves the roll traffic per round.
-        def one_mcs(grid, key):
-            kp, ks = jax.random.split(key)
-            props = tile_proposal_batch(kp, n_tiles, k_per_tile, interior,
-                                        p.neighbourhood)
-            shift = round_shift(ks, th, tw)
-            grid = run_round(grid, props, shift, dom=dom)
-            attempts = jnp.int32(n_tiles * k_per_tile)
-            return grid, attempts, attempts
-        return one_mcs
-
-    raise ValueError(f"unknown engine {p.engine}")
-
-
-def build_chunk_fn(params: EscgParams, dom: jax.Array):
+def build_chunk_fn(params: EscgParams, dom: jax.Array,
+                   one_mcs: Optional[Callable] = None):
     """chunk(grid, key, n_mcs<static>) -> (grid, key, counts[n,S+1], kept,
     attempts); jit-compiled, fully device-resident."""
-    one_mcs = build_mcs_fn(params, dom)
+    if one_mcs is None:
+        one_mcs = build_mcs_fn(params, dom)
     s = params.species
 
     @partial(jax.jit, static_argnames=("n_mcs",))
@@ -172,7 +87,10 @@ def simulate(params: EscgParams,
                                   dtype=cell_dt)
     grid = jnp.asarray(grid0, cell_dt)
 
-    chunk_fn = build_chunk_fn(p, dom_j)
+    eng = engines.build(p, dom_j)
+    if eng.grid_sharding is not None:
+        grid = jax.device_put(grid, eng.grid_sharding)
+    chunk_fn = build_chunk_fn(p, dom_j, one_mcs=eng.one_mcs)
     n = p.n_cells
     hist = [np.asarray(metrics.counts(grid, p.species))]
     mcs_done, stasis_mcs = 0, -1
@@ -213,6 +131,12 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray], n_trials: int,
     accelerators and is what the pod axis carries at multi-pod scale.
     """
     p = params.validate()
+    spec = engines.get_engine(p.engine)
+    if not spec.caps.vmappable:
+        raise ValueError(
+            f"engine {p.engine!r} is not vmappable (multi-device engines "
+            "decompose one lattice; run IID trials with a single-device "
+            "engine and shard the trial axis instead)")
     if dom is None:
         dom = dom_mod.circulant(p.species)
     dom_j = jnp.asarray(dom, jnp.float32)

@@ -36,10 +36,14 @@ def _kernel(cell_ref, dirn_ref, uact_ref, udom_ref, dom_ref, dirs_ref,
     out_ref[...] = grid_ref[...]
 
     def body(j, _):
-        cell = pl.load(cell_ref, (0, pl.ds(j, 1)))[0]
-        dirn = pl.load(dirn_ref, (0, pl.ds(j, 1)))[0]
-        ua = pl.load(uact_ref, (0, pl.ds(j, 1)))[0]
-        ud = pl.load(udom_ref, (0, pl.ds(j, 1)))[0]
+        # NB: row index must be a dslice, not a bare int — scalar int
+        # indexing into Refs is rejected by the installed JAX (the
+        # discharge rule calls .shape on every index).
+        row0 = pl.ds(0, 1)
+        cell = pl.load(cell_ref, (row0, pl.ds(j, 1)))[0, 0]
+        dirn = pl.load(dirn_ref, (row0, pl.ds(j, 1)))[0, 0]
+        ua = pl.load(uact_ref, (row0, pl.ds(j, 1)))[0, 0]
+        ud = pl.load(udom_ref, (row0, pl.ds(j, 1)))[0, 0]
 
         r = 1 + cell // iw
         c = 1 + cell % iw

@@ -21,9 +21,22 @@ import jax
 import numpy as np
 
 from ..core import dominance as dom_mod
+from ..core import engines
 from ..core import io as io_mod
 from ..core.params import EscgParams, add_cli_args, params_from_args
 from ..core.simulation import simulate
+
+
+def print_engine_matrix() -> None:
+    """Registry-driven engine table (also mirrored in README.md)."""
+    print(f"{'engine':<13} {'boundaries':<11} {'tiled':<6} {'devices':<8} "
+          f"paper ref")
+    for spec in engines.engine_specs():
+        c = spec.caps
+        print(f"{spec.name:<13} {'flux-only' if c.flux_only else 'any':<11} "
+              f"{'yes' if c.tiled else 'no':<6} "
+              f"{'multi' if c.multi_device else 'single':<8} {c.paper}")
+        print(f"{'':13} {spec.caps.description}")
 
 
 def main() -> None:
@@ -31,7 +44,14 @@ def main() -> None:
     add_cli_args(ap)
     ap.add_argument("--snapshotEvery", dest="snapshot_every", type=int,
                     default=0, help="save lattice snapshot every N MCS")
+    ap.add_argument("--listEngines", dest="list_engines",
+                    action="store_true",
+                    help="print the registered engine matrix and exit")
     args = ap.parse_args()
+
+    if args.list_engines:
+        print_engine_matrix()
+        return
 
     grid0 = None
     key = None

@@ -136,3 +136,48 @@ def batch_sharding(mesh: Mesh, rules: Dict[str, Any]):
 
 def scalar_sharding(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ------------------- ESCG lattice domain decomposition -------------------- #
+
+def auto_shard_grid(n_devices: int, height: int, width: int,
+                    tile_h: int, tile_w: int) -> tuple:
+    """Pick a (rows, cols) device grid for the sharded ESCG engine.
+
+    Constraints: every device block must be a union of (tile_h, tile_w)
+    tiles, i.e. rows | height, cols | width, and the per-device block must
+    be a tile multiple. Among factorizations of d = n_devices, n_devices-1,
+    ... the first feasible d wins (use as many devices as the lattice
+    admits) and within it the most square-ish split (minimal perimeter =
+    minimal halo traffic)."""
+    def feasible(dr, dc):
+        return (height % dr == 0 and (height // dr) % tile_h == 0
+                and width % dc == 0 and (width // dc) % tile_w == 0)
+
+    for d in range(n_devices, 0, -1):
+        pairs = [(dr, d // dr) for dr in range(1, d + 1) if d % dr == 0]
+        pairs = [pq for pq in pairs if feasible(*pq)]
+        if pairs:
+            return min(pairs, key=lambda pq: abs(pq[0] - pq[1]))
+    return (1, 1)
+
+
+def lattice_mesh(shard_grid, height: int, width: int,
+                 tile_h: int, tile_w: int, row_axis: str = "rows",
+                 col_axis: str = "cols", devices=None) -> Mesh:
+    """Mesh over the 2-D lattice decomposition. ``shard_grid=None`` picks
+    the largest feasible device grid automatically (possibly leaving
+    devices idle when the lattice doesn't factor)."""
+    import numpy as np
+
+    if devices is None:
+        devices = jax.devices()
+    if shard_grid is None:
+        shard_grid = auto_shard_grid(len(devices), height, width,
+                                     tile_h, tile_w)
+    dr, dc = shard_grid
+    if dr * dc > len(devices):
+        raise ValueError(f"shard_grid {shard_grid} needs {dr * dc} devices; "
+                         f"only {len(devices)} available")
+    dev = np.asarray(devices[:dr * dc]).reshape(dr, dc)
+    return Mesh(dev, (row_axis, col_axis))

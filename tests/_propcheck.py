@@ -1,0 +1,84 @@
+"""Minimal, dependency-free stand-in for the hypothesis API subset these
+tests use, so the property tests still RUN (deterministic seeded sampling)
+in environments without hypothesis installed (e.g. the hermetic accelerator
+container). Real hypothesis, when available, is always preferred — see the
+try/except imports in the test modules and requirements-dev.txt.
+
+Implemented: given(**kwargs), settings(max_examples=, deadline=),
+strategies.integers/floats/booleans/sampled_from/sets.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def sets(element: _Strategy, min_size: int = 0,
+             max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            out = set()
+            # bounded attempts: element domains smaller than min_size
+            # would otherwise loop forever
+            for _ in range(50 * max(1, max_size)):
+                if len(out) >= rng.randint(min_size, max_size):
+                    break
+                out.add(element.example(rng))
+            return out
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NB: no functools.wraps — copying fn's signature would make pytest
+        # treat the strategy parameters as fixtures. The wrapper must look
+        # zero-argument (these property tests use no fixtures).
+        def wrapper():
+            n = getattr(wrapper, "_propcheck_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_propcheck_max_examples", 100)
+            # deterministic per-test stream: same examples every run
+            rng = random.Random(fn.__name__)
+            for i in range(n):
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {drawn}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,6 +1,10 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # hermetic container: deterministic fallback sampler
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import dominance as dm
 

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # hermetic container: deterministic fallback sampler
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import batched, dominance as dm, reference
 from repro.core.lattice import init_grid
@@ -129,3 +133,65 @@ def test_int8_species_limit():
     from repro.core import EscgParams
     with pytest.raises(ValueError):
         EscgParams(species=200, cell_dtype="int8").validate()
+
+
+# ----------------------------- engine registry ---------------------------- #
+
+def test_registry_lists_all_engines():
+    from repro.core import engine_names, get_engine
+    names = engine_names()
+    for want in ("reference", "batched", "sublattice", "pallas",
+                 "pallas_fused", "sharded"):
+        assert want in names
+    spec = get_engine("sharded")
+    assert spec.caps.multi_device and spec.caps.flux_only
+    assert not spec.caps.vmappable
+    assert not get_engine("reference").caps.tiled
+
+
+def test_registry_unknown_engine_raises():
+    from repro.core import EscgParams, get_engine
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("warp_drive")
+    with pytest.raises(ValueError, match="unknown engine"):
+        EscgParams(engine="warp_drive").validate()
+
+
+def test_registry_caps_drive_validation():
+    from repro.core import EscgParams
+    # flux_only engines reject reflecting boundaries
+    with pytest.raises(ValueError, match="flux"):
+        EscgParams(engine="sublattice", flux=False, tile=(8, 8),
+                   length=16, height=16).validate()
+    # tiled engines reject non-dividing tiles
+    with pytest.raises(ValueError, match="divide"):
+        EscgParams(engine="pallas", tile=(7, 8), length=16,
+                   height=16).validate()
+    # non-tiled engines ignore the tile entirely
+    EscgParams(engine="batched", tile=(7, 13), length=16,
+               height=16).validate()
+
+
+def test_custom_engine_dispatches_through_simulate():
+    """simulate() must resolve engines purely through the registry — a
+    third-party registration works with no driver changes."""
+    import jax
+    from repro.core import EscgParams, engines, simulate
+
+    @engines.register("frozen_test", engines.EngineCaps(
+        description="no-op engine for registry dispatch test"))
+    def _build(p, dom_):
+        def one_mcs(grid, key):
+            n = jnp.int32(p.n_cells)
+            return grid, n, n
+        return engines.BuiltEngine(one_mcs)
+
+    try:
+        p = EscgParams(length=8, height=8, species=3, mcs=4, chunk_mcs=2,
+                       engine="frozen_test", seed=0)
+        res = simulate(p, dm.RPS(), stop_on_stasis=False)
+        # the no-op engine never changes the lattice
+        np.testing.assert_allclose(res.densities[0], res.densities[-1])
+        assert res.mcs_completed == 4
+    finally:
+        del engines._REGISTRY["frozen_test"]

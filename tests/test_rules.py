@@ -3,7 +3,11 @@ vectorized jnp version against a plain-Python transliteration of the
 paper's Algorithm 3.2 under hypothesis-generated inputs."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # hermetic container: deterministic fallback sampler
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import dominance as dm
 from repro.core.rules import apply_pair, apply_pair_reference
