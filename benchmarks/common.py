@@ -1,8 +1,11 @@
-"""Shared benchmark harness utilities. Every benchmark prints
-``name,us_per_call,derived`` CSV rows (brief requirement) plus a human
-summary to stderr."""
+"""Shared benchmark harness utilities (DESIGN.md §6). Every benchmark
+prints ``name,us_per_call,derived`` CSV rows (brief requirement) plus a
+human summary to stderr; set ``BENCH_JSON=1`` to emit one JSON object per
+row instead (the format documented in benchmarks/README.md)."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 from typing import Callable, Tuple
@@ -25,7 +28,12 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
 
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
-    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    if os.environ.get("BENCH_JSON"):
+        print(json.dumps({"name": name,
+                          "us_per_call": round(seconds * 1e6, 1),
+                          "derived": derived}), flush=True)
+    else:
+        print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 
 def note(msg: str) -> None:

@@ -1,6 +1,12 @@
 """Paper Table 4.2 — std of species-5 extinction probability across system
 sizes and MCS horizons (the dissertation's multimodality audit of Park et
-al.). Reduced: L in {16, 24}, MCS in {0, 200, 600}, 6 IID trials."""
+al.). Reduced: L in {16, 24}, MCS in {0, 200, 600}, 6 IID trials.
+
+Every (L, MCS) cell runs its trial batch through the chunked, device-sharded
+trial driver (``repro.core.trials`` via ``park.species5_extinction_std``):
+the Park protocol — 2000 serial runs in the original — executes in
+device-parallel chunks with streamed per-chunk statistics and per-trial
+stasis early-exit."""
 from __future__ import annotations
 
 import time
@@ -14,7 +20,8 @@ MCS = (0, 200, 600)
 
 
 def run() -> None:
-    note("species-5 extinction std over (L, MCS) (paper Table 4.2)")
+    note("species-5 extinction std over (L, MCS) (paper Table 4.2), "
+         "chunked trial driver")
     t0 = time.perf_counter()
     table = species5_extinction_std(LS, MCS, alpha=0.15, beta=0.75,
                                     gamma=1.0, n_trials=6)

@@ -1,47 +1,53 @@
-"""Beyond-paper: vmapped IID-trial throughput.
+"""Beyond-paper: device-sharded IID-trial throughput (the pod axis).
 
 The paper runs IID trials serially ("for L=100 we executed 2000 times" —
-Park et al.; the dissertation's Table 4.2 runs 20). Batching trials through
-vmap is the biggest statistics-throughput lever on accelerators and is what
-the 'pod' mesh axis carries at multi-pod scale. Measure updates/s at
-1 / 4 / 16 vmapped trials."""
+Park et al.; the dissertation's Table 4.2 runs 20). The trial subsystem
+(``repro.core.trials``) batches trials through vmap AND shards the trial
+axis across every local device, which is the biggest statistics-throughput
+lever on accelerators. Measure aggregate updates/s per trial count and per
+pod width (device count) via the chunked driver — results are bit-identical
+for every width, so the sweep is a pure throughput comparison.
+
+Run under fake devices to see the pod axis on CPU:
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python -m benchmarks.trials_throughput
+"""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import EscgParams, dominance as dm
-from repro.core.lattice import init_grid
-from repro.core.simulation import build_mcs_fn
+from repro.core.trials import run_trials
 
 from .common import emit, note, time_fn
 
 L, MCS = 48, 10
 
 
+def _device_counts() -> tuple:
+    n = jax.local_device_count()
+    counts = {1, n}
+    if n >= 2:
+        counts.add(2)
+    return tuple(sorted(counts))
+
+
 def run() -> None:
-    note(f"vmapped IID trials, L={L}, {MCS} MCS each (beyond-paper)")
+    note(f"device-sharded IID trials, L={L}, {MCS} MCS each (beyond-paper); "
+         f"{jax.local_device_count()} local device(s)")
     p = EscgParams(length=L, height=L, species=5, mobility=1e-4,
                    engine="batched", seed=0)
-    dom = jnp.asarray(dm.RPSLS())
-    one = build_mcs_fn(p, dom)
+    dom = dm.RPSLS()
 
-    def trial(grid, key):
-        def body(c, _):
-            g, k = c
-            k, k1 = jax.random.split(k)
-            g, _, _ = one(g, k1)
-            return (g, k), None
-        (g, _), _ = jax.lax.scan(body, (grid, key), length=MCS)
-        return g
-
-    for n in (1, 4, 16):
-        keys = jax.random.split(jax.random.PRNGKey(0), n)
-        grids = jax.vmap(lambda k: init_grid(k, L, L, 5, 0.1))(keys)
-        f = jax.jit(jax.vmap(trial))
-        t = time_fn(f, grids, keys, warmup=1, iters=2)
-        emit(f"trials_vmap_{n}", t,
-             f"{n * MCS * L * L / t / 1e6:.2f} Mupd/s aggregate")
+    for n in (4, 16):
+        for d in _device_counts():
+            f = lambda: run_trials(  # noqa: E731
+                p, dom, n, n_mcs=MCS, trial_devices=d, chunk_mcs=MCS,
+                stop_on_stasis=False)
+            t = time_fn(f, warmup=1, iters=2)
+            emit(f"trials_pod_n{n}_d{d}", t,
+                 f"{n * MCS * L * L / t / 1e6:.2f} Mupd/s aggregate "
+                 f"across {d} device(s)")
 
 
 if __name__ == "__main__":

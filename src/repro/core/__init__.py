@@ -1,15 +1,17 @@
 """Core ESCG engine — the paper's contribution as a composable JAX module."""
 from . import batched, dominance, engines, io, lattice, metrics, park
-from . import reference, rng, rules, simulation, sublattice
+from . import reference, rng, rules, simulation, sublattice, trials
 from .engines import BuiltEngine, EngineCaps, EngineSpec, engine_names
 from .engines import engine_specs, get_engine, register
 from .params import ENGINES, EscgParams
 from .simulation import SimResult, run_trials, simulate
+from .trials import TrialResult
 
 __all__ = [
     "EscgParams", "ENGINES", "SimResult", "simulate", "run_trials",
+    "TrialResult",
     "BuiltEngine", "EngineCaps", "EngineSpec", "engine_names",
     "engine_specs", "get_engine", "register",
     "batched", "dominance", "engines", "io", "lattice", "metrics", "park",
-    "reference", "rng", "rules", "simulation", "sublattice",
+    "reference", "rng", "rules", "simulation", "sublattice", "trials",
 ]

@@ -41,13 +41,25 @@ class BuiltEngine(NamedTuple):
 @dataclass(frozen=True)
 class EngineCaps:
     """Static capability metadata, consumed by params validation, the
-    trial runner and the docs engine matrix."""
+    trial runner and the docs engine matrix (DESIGN.md §2)."""
     flux_only: bool = False    # requires periodic (torus) boundaries
     tiled: bool = False        # consumes params.tile; tile must divide grid
     multi_device: bool = False  # domain-decomposed across jax.devices()
-    vmappable: bool = True     # usable under vmap (run_trials pod axis)
+    vmappable: bool = True     # usable under vmap (trials.run_trials)
+    trial_shardable: bool = True  # safe to shard the vmapped trial axis
+                               # across devices (DESIGN.md §4); requires
+                               # vmappable and no internal collectives
     description: str = ""
     paper: str = ""            # paper algorithm / figure it reproduces
+
+    @property
+    def trial_axis(self) -> str:
+        """Human-readable trial-axis support (engine matrix column)."""
+        if self.vmappable and self.trial_shardable:
+            return "pod-sharded vmap"
+        if self.vmappable:
+            return "vmap (1 device)"
+        return "—"
 
 
 @dataclass(frozen=True)
@@ -241,6 +253,7 @@ def _build_pallas_fused(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
 
 @register("sharded", EngineCaps(
     flux_only=True, tiled=True, multi_device=True, vmappable=False,
+    trial_shardable=False,
     description="domain-decomposed across devices: shard_map + ppermute "
                 "halo exchange, per-tile Philox streams, psum stasis counts",
     paper="size scaling beyond one device (Fig 4.3, L=3200)"))

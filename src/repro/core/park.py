@@ -15,7 +15,7 @@ import numpy as np
 
 from .dominance import park_alliance_network
 from .params import EscgParams
-from .simulation import run_trials
+from .trials import run_trials
 
 
 def park_params(L: int = 100, mcs: Optional[int] = None,
@@ -36,25 +36,34 @@ def survival_probabilities(alpha: float, beta: float, gamma: float = 1.0,
                            L: int = 100, n_trials: int = 20,
                            mcs: Optional[int] = None, mobility: float = 0.0,
                            key: Optional[jax.Array] = None,
-                           engine: str = "batched"
+                           engine: str = "batched",
+                           trial_devices: Optional[int] = None
                            ) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (per-species survival probability [8], n-survivors histogram
-    [9]) over vmapped IID trials — the quantity behind paper Figs 4.9-4.13."""
+    [9]) over device-sharded IID trials — the quantity behind paper Figs
+    4.9-4.13. Trials run in device-parallel chunks with streamed per-chunk
+    statistics (trials.run_trials); stasis early-exit is safe here because
+    a species can never re-appear after stasis, so the survival mask is
+    frozen from that point on."""
     params = park_params(L=L, mcs=mcs, mobility=mobility, engine=engine)
     dom = park_alliance_network(alpha, beta, gamma)
-    surv = run_trials(params, dom, n_trials, key=key)     # (trials, 8) bool
-    p_survive = surv.mean(axis=0)
-    n_surv = surv.sum(axis=1)
-    hist = np.bincount(n_surv, minlength=9)[:9] / n_trials
-    return p_survive, hist
+    res = run_trials(params, dom, n_trials, key=key,
+                     trial_devices=trial_devices)
+    return res.survival_probabilities(), res.survivors_hist()
 
 
 def species5_extinction_std(L_values, mcs_values, alpha: float = 0.15,
                             beta: float = 0.75, gamma: float = 1.0,
                             n_trials: int = 20, seed: int = 0,
-                            engine: str = "batched") -> np.ndarray:
+                            engine: str = "batched",
+                            trial_devices: Optional[int] = None
+                            ) -> np.ndarray:
     """Replication of paper Table 4.2: std of species-5 extinction indicator
-    across IID trials, for each (MCS, L). Returns (len(mcs), len(L))."""
+    across IID trials, for each (MCS, L). Returns (len(mcs), len(L)).
+
+    Each cell runs its trial batch through the chunked, device-sharded
+    driver, so the Park protocol (2000 serial runs in the original)
+    executes in device-parallel chunks with streamed statistics."""
     out = np.zeros((len(mcs_values), len(L_values)))
     dom = park_alliance_network(alpha, beta, gamma)
     for j, L in enumerate(L_values):
@@ -63,8 +72,9 @@ def species5_extinction_std(L_values, mcs_values, alpha: float = 0.15,
                 out[i, j] = 0.0
                 continue
             params = park_params(L=L, mcs=mcs, engine=engine, seed=seed)
-            surv = run_trials(params, dom, n_trials,
-                              key=jax.random.PRNGKey(seed + 17 * j + i))
-            extinct5 = 1.0 - surv[:, 4].astype(np.float64)  # species 5
+            res = run_trials(params, dom, n_trials,
+                             key=jax.random.PRNGKey(seed + 17 * j + i),
+                             trial_devices=trial_devices)
+            extinct5 = 1.0 - res.survival[:, 4].astype(np.float64)
             out[i, j] = float(extinct5.std())
     return out

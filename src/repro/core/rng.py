@@ -4,7 +4,7 @@ The paper's key PRNG insight — generate large batches of (cell, direction,
 action) draws in parallel on-device and consume them by indexed lookup — maps
 directly onto counter-based PRNGs: generation is embarrassingly parallel and
 needs no per-thread Mersenne-Twister state, seed hashing, or burn-in (the
-paper's Fig 3.4 pathology cannot occur by construction; see DESIGN.md §2).
+paper's Fig 3.4 pathology cannot occur by construction; see DESIGN.md §3).
 
 Default backend: JAX threefry. A Pallas Philox-4x32 kernel
 (``repro.kernels.philox``) provides the explicitly-tiled variant used in the

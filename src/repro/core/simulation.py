@@ -73,7 +73,18 @@ def simulate(params: EscgParams,
              key: Optional[jax.Array] = None,
              hooks: Sequence[Callable[[int, jax.Array, np.ndarray], None]] = (),
              stop_on_stasis: bool = True) -> SimResult:
-    """Run the full simulation (paper Algorithm 3.3 control flow)."""
+    """Run the full simulation (paper Algorithm 3.3 control flow).
+
+    Chunked stasis early-exit semantics (paper §3.2.2): each jitted chunk
+    returns per-MCS population counts; the host scans them for the first
+    MCS with <= 1 species alive. ``stasis_mcs`` is therefore exact to the
+    MCS, but the run only *stops* at the next chunk boundary — up to
+    ``chunk_mcs - 1`` extra MCS execute after stasis (their counts are
+    still recorded in ``densities``). Hooks fire once per chunk, including
+    the chunk in which stasis was detected. The trial-batch counterpart
+    (``trials.run_trials``) applies the same rule per trial and exits only
+    when every trial has reached stasis.
+    """
     p = params.validate()
     if dom is None:
         dom = dom_mod.circulant(p.species)
@@ -123,42 +134,15 @@ def simulate(params: EscgParams,
 def run_trials(params: EscgParams, dom: Optional[np.ndarray], n_trials: int,
                key: Optional[jax.Array] = None,
                n_mcs: Optional[int] = None) -> np.ndarray:
-    """Run ``n_trials`` IID simulations *vectorized with vmap* and return the
-    final survival mask, shape (n_trials, S) bool.
+    """Back-compat wrapper over the trial subsystem (``core.trials``):
+    returns only the final survival mask, shape (n_trials, S) bool.
 
-    The paper runs IID trials serially (2000 runs for Park Fig 5!); batching
-    trials through vmap is the single biggest beyond-paper throughput lever on
-    accelerators and is what the pod axis carries at multi-pod scale.
+    The full driver — chunked, device-sharded over the pod axis, streaming
+    stasis / extinction statistics — lives in ``trials.run_trials`` and
+    returns a ``TrialResult``; prefer it for new code (DESIGN.md §4). The
+    trial driver honours ``params.cell_dtype`` (the legacy vmap runner here
+    silently initialized int32 lattices regardless).
     """
-    p = params.validate()
-    spec = engines.get_engine(p.engine)
-    if not spec.caps.vmappable:
-        raise ValueError(
-            f"engine {p.engine!r} is not vmappable (multi-device engines "
-            "decompose one lattice; run IID trials with a single-device "
-            "engine and shard the trial axis instead)")
-    if dom is None:
-        dom = dom_mod.circulant(p.species)
-    dom_j = jnp.asarray(dom, jnp.float32)
-    if key is None:
-        key = jax.random.PRNGKey(p.seed)
-    n_mcs = int(n_mcs if n_mcs is not None else p.mcs)
-    one_mcs = build_mcs_fn(p, dom_j)
-
-    kg, kr = jax.random.split(key)
-    grids = jax.vmap(lambda k: lattice.init_grid(
-        k, p.height, p.length, p.species, p.empty))(
-            jax.random.split(kg, n_trials))
-    keys = jax.random.split(kr, n_trials)
-
-    @jax.jit
-    def run_one(grid, key):
-        def body(carry, _):
-            g, k = carry
-            k, k1 = jax.random.split(k)
-            g, _, _ = one_mcs(g, k1)
-            return (g, k), None
-        (grid, _), _ = jax.lax.scan(body, (grid, key), length=n_mcs)
-        return metrics.survivors(grid, p.species)
-
-    return np.asarray(jax.vmap(run_one)(grids, keys))
+    from .trials import run_trials as _run_trials  # lazy: avoid cycle
+    return _run_trials(params, dom, n_trials, key=key, n_mcs=n_mcs,
+                       stop_on_stasis=False).survival

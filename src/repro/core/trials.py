@@ -1,0 +1,312 @@
+"""Device-sharded IID trial subsystem — the *pod* axis (DESIGN.md §4).
+
+The paper's replication studies hinge on massed IID trials (Park et al. ran
+2000 serial repetitions for one figure; the dissertation's Table 4.2 runs 20
+per cell). PR 1 decomposed one big lattice across devices (the grid axis);
+this module carries the orthogonal axis: many independent lattices, one per
+trial, vmapped on-device and **sharded across all local devices** over the
+trial dimension. sPEGG (Okamoto & Amarasekare 2016) and the wafer-scale
+agent-evolution work both show this population/trial axis is where
+eco-evolutionary GPU throughput compounds.
+
+Design invariants (tested in tests/test_trials.py):
+
+* **Per-trial fold-in keys.** Trial ``t`` uses
+  ``jax.random.fold_in(base_key, t)`` — a pure function of the base key and
+  the *global* trial index, never of the trial count, the padding, or the
+  device layout. Results are therefore bit-identical for any
+  ``trial_devices`` and any padding, and a prefix of a larger run equals the
+  smaller run (the same counter-based idiom as ``rng.tile_stream_batch`` on
+  the grid axis).
+* **Padding to device multiples.** ``n_trials`` is padded up to a multiple
+  of the device count; padded trials run (they are indistinguishable to
+  XLA's SPMD partitioner) and are dropped from every statistic on the host.
+* **Chunked streaming.** ``n_mcs`` executes in jitted chunks of
+  ``chunk_mcs`` (one ``lax.scan`` per chunk, fully device-resident). The
+  host only ever sees per-chunk per-MCS alive-species masks — never the
+  grids — and streams stasis / extinction statistics between chunks instead
+  of materializing one monolithic ``(trials, mcs, ...)`` history.
+* **Chunked stasis early-exit.** Per-trial stasis (<= 1 species alive,
+  paper §3.2.2) is recorded at exact per-MCS resolution from the streamed
+  masks, but the driver only *stops* at chunk granularity, and only once
+  EVERY live trial has entered stasis (a vmapped batch advances in
+  lock-step; finished trials are monocultures whose survival mask can no
+  longer change, so running them to the barrier is harmless).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from . import dominance as dom_mod
+from . import engines, lattice, metrics
+from .params import EscgParams
+
+POD_AXIS = "pod"   # mesh axis name for the trial dimension
+
+
+# ------------------------------ TrialResult ------------------------------- #
+
+@dataclass
+class TrialResult:
+    """Streamed statistics of a batch of IID trials.
+
+    Grids are intentionally absent: at pod scale (thousands of trials) the
+    lattices stay device-resident and only the statistics below ever reach
+    the host.
+    """
+    survival: np.ndarray       # (n_trials, S) bool — species alive at end
+    densities: np.ndarray      # (n_trials, S + 1) — final densities, col 0
+                               # = empties
+    stasis_mcs: np.ndarray     # (n_trials,) int — first MCS with <= 1
+                               # species alive; -1 if never
+    extinction_mcs: np.ndarray  # (n_trials, S) int — first MCS each species
+                               # hit zero population; 0 = absent at init,
+                               # -1 = never went extinct
+    mcs_completed: int         # MCS every trial actually ran
+    kept_fraction: float       # applied / attempted proposals (E2 audit)
+    n_trials: int
+    n_devices: int             # pod-axis width the batch ran on
+
+    # --------------------------- statistics ---------------------------- #
+    @property
+    def species(self) -> int:
+        return self.survival.shape[1]
+
+    def survival_probabilities(self) -> np.ndarray:
+        """Per-species survival probability, shape (S,) — Park Figs 4.9+."""
+        return self.survival.mean(axis=0)
+
+    def survivors_hist(self) -> np.ndarray:
+        """Histogram over the number of surviving species, shape (S + 1,),
+        normalized to sum to 1 (Park n-survivor statistics)."""
+        s = self.species
+        return (np.bincount(self.survival.sum(axis=1).astype(np.int64),
+                            minlength=s + 1)[:s + 1] / self.n_trials)
+
+    def extinction_probability(self, sp: int) -> float:
+        """P(species ``sp``, 1-indexed, extinct at end) over trials."""
+        return float(1.0 - self.survival[:, sp - 1].mean())
+
+    def mean_densities(self) -> np.ndarray:
+        return self.densities.mean(axis=0)
+
+    # ------------------------------ io --------------------------------- #
+    def to_json(self) -> str:
+        return json.dumps({
+            "survival": self.survival.astype(int).tolist(),
+            "densities": self.densities.tolist(),
+            "stasis_mcs": self.stasis_mcs.tolist(),
+            "extinction_mcs": self.extinction_mcs.tolist(),
+            "mcs_completed": self.mcs_completed,
+            "kept_fraction": self.kept_fraction,
+            "n_trials": self.n_trials,
+            "n_devices": self.n_devices,
+        })
+
+    @staticmethod
+    def from_json(s: str) -> "TrialResult":
+        d = json.loads(s)
+        return TrialResult(
+            survival=np.asarray(d["survival"], dtype=bool),
+            densities=np.asarray(d["densities"], dtype=np.float64),
+            stasis_mcs=np.asarray(d["stasis_mcs"], dtype=np.int64),
+            extinction_mcs=np.asarray(d["extinction_mcs"], dtype=np.int64),
+            mcs_completed=int(d["mcs_completed"]),
+            kept_fraction=float(d["kept_fraction"]),
+            n_trials=int(d["n_trials"]),
+            n_devices=int(d["n_devices"]),
+        )
+
+
+# --------------------------- pod-axis sharding ----------------------------- #
+
+def pod_sharding(trial_devices: Optional[int] = None) -> NamedSharding:
+    """Batch sharding over the leading (trial) axis on a 1-D ``pod`` mesh
+    of the first ``trial_devices`` local devices (all of them when None)."""
+    devs = jax.local_devices()
+    d = len(devs) if trial_devices is None else int(trial_devices)
+    if d < 1:
+        raise ValueError("trial_devices must be >= 1")
+    if d > len(devs):
+        raise ValueError(f"trial_devices={d} but only {len(devs)} local "
+                         "devices are available")
+    mesh = Mesh(np.asarray(devs[:d]), (POD_AXIS,))
+    return NamedSharding(mesh, P(POD_AXIS))
+
+
+def pad_trials(n_trials: int, n_devices: int) -> int:
+    """Smallest multiple of ``n_devices`` that is >= ``n_trials`` (XLA SPMD
+    needs the batch axis to divide evenly across the pod mesh)."""
+    return -(-n_trials // n_devices) * n_devices
+
+
+def trial_grids_and_keys(p: EscgParams, key: jax.Array, n_pad: int,
+                         sharding: Optional[NamedSharding] = None):
+    """Initial lattices + per-trial run keys for ``n_pad`` trials.
+
+    Trial ``t``'s key is ``fold_in(key, t)`` (see module docstring); the
+    lattice honours ``params.cell_dtype`` exactly like ``simulate`` does
+    (the legacy vmap runner silently initialized int32 grids regardless).
+    """
+    cell_dt = jnp.dtype(p.cell_dtype)
+    trial_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n_pad, dtype=jnp.int32))
+    if sharding is not None:
+        trial_keys = jax.device_put(trial_keys, sharding)
+
+    @jax.jit
+    def init_one(tk):
+        kg, kr = jax.random.split(tk)
+        g = lattice.init_grid(kg, p.height, p.length, p.species, p.empty,
+                              dtype=cell_dt)
+        return g, kr
+
+    return jax.vmap(init_one)(trial_keys)
+
+
+# ----------------------------- chunked driver ------------------------------ #
+
+def build_trial_chunk(p: EscgParams, dom: jax.Array,
+                      one_mcs: Optional[Callable] = None):
+    """chunk(grids, keys, n_mcs<static>) -> (grids, keys, final_counts,
+    alive[n, n_mcs, S], kept[n], attempts[n]); jitted, vmapped over the
+    leading trial axis, device-resident. ``alive`` is the only per-MCS
+    output and is what the host streams statistics from."""
+    if one_mcs is None:
+        one_mcs = engines.build(p, dom).one_mcs
+    s = p.species
+
+    @partial(jax.jit, static_argnames=("n_mcs",))
+    def chunk(grids, keys, n_mcs: int):
+        def one(grid, key):
+            def body(carry, _):
+                g, k, kept, att = carry
+                k, k1 = jax.random.split(k)
+                g, k2, a2 = one_mcs(g, k1)
+                cnt = metrics.counts(g, s)
+                return (g, k, kept + k2, att + a2), cnt
+            (g, k, kept, att), cnts = jax.lax.scan(
+                body, (grid, key, jnp.int32(0), jnp.int32(0)), length=n_mcs)
+            return g, k, cnts[-1], cnts[:, 1:] > 0, kept, att
+        return jax.vmap(one)(grids, keys)
+
+    return chunk
+
+
+def _first_true_mcs(mask: np.ndarray, offset: int) -> np.ndarray:
+    """First 1-based MCS index of a True along axis 1 of ``mask``
+    (trials-leading), offset by the MCS already completed; -1 where the
+    event never happens in this chunk. Works on any trailing shape."""
+    hit = mask.any(axis=1)
+    first = mask.argmax(axis=1) + offset + 1
+    return np.where(hit, first, -1)
+
+
+def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
+               n_trials: int = 1, key: Optional[jax.Array] = None,
+               n_mcs: Optional[int] = None,
+               trial_devices: Optional[int] = None,
+               chunk_mcs: Optional[int] = None,
+               stop_on_stasis: bool = True,
+               hooks: Sequence[Callable[[int, np.ndarray], None]] = (),
+               ) -> TrialResult:
+    """Run ``n_trials`` IID simulations, vmapped and device-sharded.
+
+    The batch is padded to a multiple of the pod width (``trial_devices``,
+    default: all local devices), placed with the trial axis sharded across
+    the pod mesh, and advanced in jitted chunks of ``chunk_mcs`` MCS
+    (default ``params.chunk_mcs``). Between chunks the host streams
+    alive-species masks into per-trial stasis / extinction statistics and —
+    when ``stop_on_stasis`` — exits early once every trial has reached
+    stasis (see module docstring for the exact chunked semantics).
+
+    ``hooks`` fire after every chunk with ``(mcs_done, alive_counts)``
+    where ``alive_counts`` is the (n_trials,) number of species alive per
+    trial at the chunk boundary.
+
+    Bit-identical for any ``trial_devices`` and any padding: per-trial
+    PRNG keys are ``fold_in(key, trial_index)``.
+    """
+    p = params.validate()
+    spec = engines.get_engine(p.engine)
+    if not spec.caps.vmappable:
+        raise ValueError(
+            f"engine {p.engine!r} is not vmappable (multi-device engines "
+            "decompose one lattice; run IID trials with a single-device "
+            "engine and shard the trial axis instead)")
+    if not spec.caps.trial_shardable and (trial_devices or 1) > 1:
+        raise ValueError(f"engine {p.engine!r} does not support trial-axis "
+                         "sharding; use trial_devices=1")
+    if n_trials < 1:
+        raise ValueError("n_trials must be >= 1")
+    if dom is None:
+        dom = dom_mod.circulant(p.species)
+    dom_j = jnp.asarray(dom, jnp.float32)
+    if key is None:
+        key = jax.random.PRNGKey(p.seed)
+    n_mcs = int(n_mcs if n_mcs is not None else p.mcs)
+    if chunk_mcs is not None and chunk_mcs < 1:
+        raise ValueError("chunk_mcs must be >= 1")
+    # n_mcs == 0 is legal: the loop below never runs and the result carries
+    # the initial survival mask / densities (legacy vmap-runner behaviour)
+    chunk_len = int(chunk_mcs if chunk_mcs is not None
+                    else max(1, min(p.chunk_mcs, n_mcs)))
+
+    sharding = (pod_sharding(trial_devices) if spec.caps.trial_shardable
+                else pod_sharding(1))
+    n_dev = sharding.mesh.devices.size
+    n_pad = pad_trials(n_trials, n_dev)
+
+    grids, keys = trial_grids_and_keys(p, key, n_pad, sharding)
+    chunk_fn = build_trial_chunk(p, dom_j)
+
+    s = p.species
+    # species absent at initialization count as extinct at MCS 0
+    init_cnts = np.asarray(jax.jit(jax.vmap(
+        lambda g: metrics.counts(g, s)))(grids))
+    ext = np.where(init_cnts[:, 1:] > 0, -1, 0).astype(np.int64)
+    stasis = np.full(n_pad, -1, np.int64)
+    surv = init_cnts[:, 1:] > 0
+    final_cnts = init_cnts
+    kept_tot = att_tot = 0
+    done = 0
+
+    while done < n_mcs:
+        m = min(chunk_len, n_mcs - done)
+        grids, keys, cnts, alive, kept, att = chunk_fn(grids, keys, m)
+        alive_h = np.asarray(alive)                  # (n_pad, m, S) bool
+        final_cnts = np.asarray(cnts)
+        kept_tot += int(np.asarray(kept)[:n_trials].sum())
+        att_tot += int(np.asarray(att)[:n_trials].sum())
+
+        first_dead = _first_true_mcs(~alive_h, done)     # (n_pad, S)
+        ext = np.where((ext < 0) & (first_dead > 0), first_dead, ext)
+        first_stasis = _first_true_mcs(alive_h.sum(axis=2) <= 1, done)
+        stasis = np.where((stasis < 0) & (first_stasis > 0),
+                          first_stasis, stasis)
+        surv = alive_h[:, -1, :]
+        done += m
+        for hook in hooks:
+            hook(done, surv[:n_trials].sum(axis=1))
+        if stop_on_stasis and (stasis[:n_trials] >= 0).all():
+            break
+
+    return TrialResult(
+        survival=surv[:n_trials].astype(bool),
+        densities=final_cnts[:n_trials] / p.n_cells,
+        stasis_mcs=stasis[:n_trials],
+        extinction_mcs=ext[:n_trials],
+        mcs_completed=done,
+        kept_fraction=(kept_tot / att_tot) if att_tot else 1.0,
+        n_trials=n_trials,
+        n_devices=n_dev,
+    )

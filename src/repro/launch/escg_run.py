@@ -1,21 +1,36 @@
 """ESCG simulation driver — CLI-parity with the paper (Tables 3.1/3.2).
 
 This is the production entry point for the paper's own workload: the
-end-to-end driver of this framework's kind (simulation). Supports all four
-engines, --save/--resume state round-trips, dominance CSV import, periodic
-snapshots and density export.
+end-to-end driver of this framework's kind (simulation). Supports every
+registered engine, --save/--resume state round-trips, dominance CSV import,
+periodic snapshots and density export.
+
+Beyond the paper's CLI it exposes the two scaling axes (DESIGN.md §4-§5):
+
+* ``--engine sharded [--shardGrid R C]`` — one big lattice decomposed
+  across devices (grid axis).
+* ``--trials N [--trialDevices D]`` — N IID replicate lattices, vmapped
+  and sharded across devices over the trial axis (pod axis). Prints
+  streamed survival / stasis statistics; with ``--save true`` the full
+  ``TrialResult`` JSON lands in ``<outDir>/trials.json``. Results are
+  bit-identical for any ``--trialDevices`` (per-trial fold-in PRNG keys).
 
 Examples:
   python -m repro.launch.escg_run --length 200 --height 200 --mcs 2000 \
       --engine batched --save true --outDir out/rps
   python -m repro.launch.escg_run --dominance dominance.csv --resume true \
       --outDir out/rps            # continue a saved run
+  python -m repro.launch.escg_run --length 100 --height 100 --species 8 \
+      --trials 64 --mcs 10000     # Park-style massed IID replication
+  python -m repro.launch.escg_run --listEngines --markdown   # engine matrix
 """
 from __future__ import annotations
 
 import argparse
 import os
+import re
 import time
+from typing import Optional
 
 import jax
 import numpy as np
@@ -25,38 +40,160 @@ from ..core import engines
 from ..core import io as io_mod
 from ..core.params import EscgParams, add_cli_args, params_from_args
 from ..core.simulation import simulate
+from ..core.trials import run_trials
+
+# ------------------------- engine matrix (docs) --------------------------- #
+
+_MATRIX_HEAD = ("engine", "boundaries", "tile", "devices", "trial axis",
+                "reproduces")
+_MATRIX_BEGIN = ("<!-- engine-matrix:begin (generated: escg_run "
+                 "--listEngines --markdown; CI-checked) -->")
+_MATRIX_END = "<!-- engine-matrix:end -->"
+
+
+def engine_matrix_rows():
+    """One row per registered engine, derived purely from EngineCaps."""
+    rows = []
+    for spec in engines.engine_specs():
+        c = spec.caps
+        tile = ("must divide device blocks" if c.multi_device
+                else "must divide lattice") if c.tiled else "—"
+        rows.append((f"`{spec.name}`",
+                     "flux only" if c.flux_only else "flux or reflect",
+                     tile,
+                     "multi" if c.multi_device else "single",
+                     c.trial_axis,
+                     f"{c.paper} — {c.description}"))
+    return rows
+
+
+def engine_matrix_markdown() -> str:
+    """The README engine matrix, generated from the live registry."""
+    lines = ["| " + " | ".join(_MATRIX_HEAD) + " |",
+             "|" + "---|" * len(_MATRIX_HEAD)]
+    for row in engine_matrix_rows():
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines)
+
+
+def readme_matrix_drift(readme_path: str) -> Optional[str]:
+    """None when the README block between the engine-matrix markers equals
+    the registry-generated table; else a human-readable drift message.
+    Used by ``--listEngines --check`` (CI) and tests/test_docs.py."""
+    with open(readme_path) as f:
+        text = f.read()
+    m = re.search(re.escape(_MATRIX_BEGIN) + r"\n(.*?)\n"
+                  + re.escape(_MATRIX_END), text, re.S)
+    if not m:
+        return f"{readme_path}: engine-matrix markers not found"
+    want = engine_matrix_markdown().strip()
+    got = m.group(1).strip()
+    if got != want:
+        return (f"{readme_path}: engine matrix drifted from the registry.\n"
+                f"Regenerate with:\n  PYTHONPATH=src python -m "
+                f"repro.launch.escg_run --listEngines --markdown\n"
+                f"--- README ---\n{got}\n--- registry ---\n{want}")
+    return None
 
 
 def print_engine_matrix() -> None:
-    """Registry-driven engine table (also mirrored in README.md)."""
+    """Registry-driven engine table (plain-text variant)."""
     print(f"{'engine':<13} {'boundaries':<11} {'tiled':<6} {'devices':<8} "
-          f"paper ref")
+          f"{'trial axis':<17} paper ref")
     for spec in engines.engine_specs():
         c = spec.caps
         print(f"{spec.name:<13} {'flux-only' if c.flux_only else 'any':<11} "
               f"{'yes' if c.tiled else 'no':<6} "
-              f"{'multi' if c.multi_device else 'single':<8} {c.paper}")
+              f"{'multi' if c.multi_device else 'single':<8} "
+              f"{c.trial_axis:<17} {c.paper}")
         print(f"{'':13} {spec.caps.description}")
 
+
+# ------------------------------ trial mode -------------------------------- #
+
+def run_trial_batch(params: EscgParams, dom: np.ndarray, n_trials: int,
+                    trial_devices: Optional[int]) -> None:
+    """--trials N: massed IID replication through the pod-axis driver."""
+    def progress(mcs_done, alive_counts):
+        in_stasis = int((alive_counts <= 1).sum())
+        print(f"[escg]   chunk -> MCS {mcs_done}: {in_stasis}/{n_trials} "
+              f"trials in stasis", flush=True)
+
+    t0 = time.time()
+    res = run_trials(params, dom, n_trials, trial_devices=trial_devices,
+                     hooks=[progress])
+    dt = time.time() - t0
+
+    upd = res.mcs_completed * params.n_cells * n_trials
+    print(f"[escg] {n_trials} trials x {params.height}x{params.length} "
+          f"species={params.species} engine={params.engine} on "
+          f"{res.n_devices} device(s): {res.mcs_completed} MCS in {dt:.2f}s "
+          f"({upd / max(dt, 1e-9):.3g} updates/s aggregate)")
+    print(f"[escg] survival probabilities: "
+          f"{np.round(res.survival_probabilities(), 4)}")
+    print(f"[escg] survivors histogram:    "
+          f"{np.round(res.survivors_hist(), 4)}")
+    n_stasis = int((res.stasis_mcs >= 0).sum())
+    if n_stasis:
+        reached = res.stasis_mcs[res.stasis_mcs >= 0]
+        print(f"[escg] stasis reached in {n_stasis}/{n_trials} trials "
+              f"(median MCS {int(np.median(reached))})")
+    if params.save:
+        os.makedirs(params.out_dir, exist_ok=True)
+        path = os.path.join(params.out_dir, "trials.json")
+        with open(path, "w") as f:
+            f.write(res.to_json())
+        print(f"[escg] TrialResult saved to {path}")
+
+
+# --------------------------------- main ----------------------------------- #
 
 def main() -> None:
     ap = argparse.ArgumentParser(description="ESCG simulator (paper CLI)")
     add_cli_args(ap)
     ap.add_argument("--snapshotEvery", dest="snapshot_every", type=int,
                     default=0, help="save lattice snapshot every N MCS")
+    ap.add_argument("--trials", type=int, default=0,
+                    help="run N IID trials (vmapped, sharded across devices "
+                         "over the trial axis) instead of one simulation; "
+                         "prints survival/stasis statistics")
+    ap.add_argument("--trialDevices", dest="trial_devices", type=int,
+                    default=None,
+                    help="pod width for --trials: number of local devices "
+                         "to shard the trial axis across (default: all; "
+                         "results are bit-identical for any value)")
     ap.add_argument("--listEngines", dest="list_engines",
                     action="store_true",
                     help="print the registered engine matrix and exit")
+    ap.add_argument("--markdown", action="store_true",
+                    help="with --listEngines: print the matrix as the "
+                         "markdown table embedded in README.md")
+    ap.add_argument("--check", dest="check_readme", metavar="README",
+                    default=None,
+                    help="with --listEngines: exit non-zero if README's "
+                         "engine matrix drifted from the registry (CI)")
     args = ap.parse_args()
 
     if args.list_engines:
-        print_engine_matrix()
+        if args.check_readme:
+            drift = readme_matrix_drift(args.check_readme)
+            if drift:
+                raise SystemExit(drift)
+            print(f"[escg] {args.check_readme} engine matrix matches the "
+                  "registry")
+        elif args.markdown:
+            print(engine_matrix_markdown())
+        else:
+            print_engine_matrix()
         return
 
     grid0 = None
     key = None
     start_mcs = 0
     if args.resume:
+        if args.trials:
+            raise SystemExit("--trials and --resume are mutually exclusive "
+                             "(trial batches keep no host-side state)")
         params, grid0, start_mcs, dom, key_arr = io_mod.load_state(
             args.out_dir)
         params = params.replace(resume=True)
@@ -76,6 +213,11 @@ def main() -> None:
             # default circulant: RPS for 3, C(S,{1,2}) for 5+, C(S,{1}) else
             offs = (1, 2) if params.species >= 5 else (1,)
             dom = dom_mod.circulant(params.species, offs)
+
+    if args.trials:
+        run_trial_batch(params.validate(), dom, args.trials,
+                        args.trial_devices)
+        return
 
     params = params.replace(mcs=params.mcs - start_mcs).validate()
 

@@ -1,4 +1,4 @@
-"""GPipe-style pipeline parallelism over a mesh axis (opt-in; DESIGN.md §5).
+"""GPipe-style pipeline parallelism over a mesh axis (opt-in; DESIGN.md §8).
 
 Layers are partitioned into `n_stages` contiguous blocks whose parameters
 shard over the pipeline mesh axis; microbatches stream through stages with

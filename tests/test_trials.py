@@ -1,0 +1,239 @@
+"""The device-sharded trial subsystem (core/trials.py, DESIGN.md §4).
+
+Fast tests run on the single real CPU device; the device-layout
+bit-identity acceptance test spawns a subprocess with fake CPU devices
+(slow, nightly CI)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EscgParams, dominance as dm
+from repro.core.trials import (TrialResult, build_trial_chunk, pad_trials,
+                               pod_sharding, run_trials,
+                               trial_grids_and_keys)
+
+
+def small_params(**kw):
+    base = dict(length=12, height=12, species=3, seed=9)
+    base.update(kw)
+    return EscgParams(**base)
+
+
+# ------------------------------- driver ----------------------------------- #
+
+def test_run_trials_returns_trial_result():
+    r = run_trials(small_params(), dm.RPS(), n_trials=5, n_mcs=10)
+    assert isinstance(r, TrialResult)
+    assert r.survival.shape == (5, 3) and r.survival.dtype == bool
+    assert r.densities.shape == (5, 4)
+    np.testing.assert_allclose(r.densities.sum(axis=1), 1.0, atol=1e-6)
+    assert r.stasis_mcs.shape == (5,)
+    assert r.extinction_mcs.shape == (5, 3)
+    assert r.mcs_completed == 10
+    assert r.n_trials == 5 and r.n_devices >= 1
+    # 10 MCS on a 12x12 RPS grid: everyone still alive, nothing extinct
+    assert r.survival.all()
+    assert (r.extinction_mcs == -1).all()
+    assert 0.0 < r.kept_fraction <= 1.0
+
+
+def test_trial_prefix_stability():
+    """fold-in keys: trial t's trajectory is independent of the batch size,
+    so a prefix of a larger batch equals the smaller batch (this is also
+    what makes padding sound)."""
+    p = small_params(species=5, mobility=1e-4)
+    dom = dm.RPSLS()
+    r5 = run_trials(p, dom, n_trials=5, n_mcs=8, stop_on_stasis=False)
+    r3 = run_trials(p, dom, n_trials=3, n_mcs=8, stop_on_stasis=False)
+    np.testing.assert_array_equal(r3.survival, r5.survival[:3])
+    np.testing.assert_array_equal(r3.densities, r5.densities[:3])
+    np.testing.assert_array_equal(r3.stasis_mcs, r5.stasis_mcs[:3])
+    np.testing.assert_array_equal(r3.extinction_mcs, r5.extinction_mcs[:3])
+
+
+def test_chunking_invariance():
+    """Statistics are independent of the chunk split (the per-MCS key
+    threading never sees chunk boundaries)."""
+    p = small_params(species=5, mobility=1e-4)
+    dom = dm.RPSLS()
+    r_mono = run_trials(p, dom, 4, n_mcs=9, chunk_mcs=9,
+                        stop_on_stasis=False)
+    r_chunk = run_trials(p, dom, 4, n_mcs=9, chunk_mcs=2,
+                         stop_on_stasis=False)
+    np.testing.assert_array_equal(r_mono.survival, r_chunk.survival)
+    np.testing.assert_array_equal(r_mono.densities, r_chunk.densities)
+    np.testing.assert_array_equal(r_mono.stasis_mcs, r_chunk.stasis_mcs)
+    np.testing.assert_array_equal(r_mono.extinction_mcs,
+                                  r_chunk.extinction_mcs)
+
+
+def test_stasis_early_exit_and_recording():
+    """Single species + empties: stasis from MCS 1; the driver exits at the
+    first chunk boundary instead of running all 500 MCS."""
+    p = EscgParams(length=10, height=10, species=1, mcs=500, chunk_mcs=50,
+                   empty=0.5, mu=0.0, sigma=1.0, epsilon=0.0, seed=0)
+    r = run_trials(p, np.zeros((1, 1), np.float32), n_trials=3)
+    assert (r.stasis_mcs == 1).all()
+    assert r.mcs_completed == 50          # one chunk, then the early exit
+
+
+def test_cell_dtype_honoured_and_value_stable():
+    """The trial driver honours params.cell_dtype (the legacy vmap runner
+    dropped it), and the dtype does not change trajectories."""
+    p8 = small_params(cell_dtype="int8")
+    grids, _ = trial_grids_and_keys(p8.validate(), jax.random.PRNGKey(0), 2)
+    assert grids.dtype == jnp.int8
+    r8 = run_trials(p8, dm.RPS(), 3, n_mcs=6, stop_on_stasis=False)
+    r32 = run_trials(small_params(cell_dtype="int32"), dm.RPS(), 3, n_mcs=6,
+                     stop_on_stasis=False)
+    np.testing.assert_array_equal(r8.survival, r32.survival)
+    np.testing.assert_array_equal(r8.densities, r32.densities)
+
+
+def test_zero_mcs_returns_initial_state():
+    """n_mcs=0 (Park Table 4.2 has MCS=0 cells): no chunks run and the
+    result carries the initial survival mask, like the legacy runner."""
+    r = run_trials(small_params(empty=0.0), dm.RPS(), 3, n_mcs=0)
+    assert r.mcs_completed == 0
+    assert r.survival.all()
+    np.testing.assert_allclose(r.densities.sum(axis=1), 1.0, atol=1e-6)
+    assert r.kept_fraction == 1.0
+    with pytest.raises(ValueError, match="chunk_mcs"):
+        run_trials(small_params(), dm.RPS(), 3, n_mcs=5, chunk_mcs=0)
+
+
+def test_padding_helper():
+    assert pad_trials(5, 4) == 8
+    assert pad_trials(8, 4) == 8
+    assert pad_trials(1, 4) == 4
+    assert pad_trials(7, 1) == 7
+
+
+def test_pod_sharding_validation():
+    with pytest.raises(ValueError, match="trial_devices"):
+        pod_sharding(0)
+    with pytest.raises(ValueError, match="local devices"):
+        pod_sharding(10_000)
+
+
+def test_rejects_non_vmappable_engine():
+    with pytest.raises(ValueError, match="vmappable"):
+        run_trials(EscgParams(length=16, height=16, engine="sharded",
+                              tile=(8, 8)), dm.RPS(), n_trials=2, n_mcs=1)
+
+
+def test_hooks_stream_per_chunk():
+    calls = []
+    run_trials(small_params(), dm.RPS(), 4, n_mcs=9, chunk_mcs=3,
+               stop_on_stasis=False,
+               hooks=[lambda m, alive: calls.append((m, alive.shape))])
+    assert [c[0] for c in calls] == [3, 6, 9]
+    assert all(c[1] == (4,) for c in calls)
+
+
+def test_trial_chunk_shapes():
+    p = small_params().validate()
+    dom = jnp.asarray(dm.RPS(), jnp.float32)
+    grids, keys = trial_grids_and_keys(p, jax.random.PRNGKey(1), 4)
+    chunk = build_trial_chunk(p, dom)
+    g2, k2, cnts, alive, kept, att = chunk(grids, keys, 5)
+    assert g2.shape == (4, 12, 12)
+    assert cnts.shape == (4, 4)
+    assert alive.shape == (4, 5, 3) and alive.dtype == jnp.bool_
+    assert kept.shape == (4,) and att.shape == (4,)
+    assert int(cnts.sum()) == 4 * p.n_cells
+
+
+# ----------------------- TrialResult statistics --------------------------- #
+
+def test_trial_result_statistics_roundtrip():
+    surv = np.array([[True, True, False],
+                     [True, False, False],
+                     [True, True, True],
+                     [True, False, False]])
+    res = TrialResult(
+        survival=surv,
+        densities=np.array([[0.0, 0.5, 0.5, 0.0]] * 4),
+        stasis_mcs=np.array([3, -1, 7, 2]),
+        extinction_mcs=np.array([[-1, -1, 4]] * 4),
+        mcs_completed=10, kept_fraction=0.9, n_trials=4, n_devices=2)
+
+    np.testing.assert_allclose(res.survival_probabilities(),
+                               [1.0, 0.5, 0.25])
+    hist = res.survivors_hist()
+    assert hist.shape == (4,)
+    np.testing.assert_allclose(hist, [0.0, 0.5, 0.25, 0.25])
+    assert abs(hist.sum() - 1.0) < 1e-9
+    assert res.extinction_probability(1) == 0.0
+    assert res.extinction_probability(3) == 0.75
+    assert res.species == 3
+
+    back = TrialResult.from_json(res.to_json())
+    np.testing.assert_array_equal(back.survival, res.survival)
+    np.testing.assert_allclose(back.densities, res.densities)
+    np.testing.assert_array_equal(back.stasis_mcs, res.stasis_mcs)
+    np.testing.assert_array_equal(back.extinction_mcs, res.extinction_mcs)
+    assert back.mcs_completed == res.mcs_completed
+    assert back.kept_fraction == res.kept_fraction
+    assert back.n_trials == res.n_trials
+    assert back.n_devices == res.n_devices
+    assert back.survival.dtype == bool
+
+
+def test_legacy_wrapper_returns_survival_mask():
+    from repro.core import run_trials as legacy
+    surv = legacy(small_params(), dm.RPS(), 5, n_mcs=10)
+    assert isinstance(surv, np.ndarray)
+    assert surv.shape == (5, 3) and surv.dtype == bool
+
+
+# ------------------------------ multi-device ------------------------------- #
+
+@pytest.mark.slow
+def test_trials_bit_identical_across_device_layouts(subproc):
+    """Acceptance: the sharded trial runner is bit-identical to the
+    single-device vmap path for pod widths 1/2/4, including a trial count
+    that does not divide the device count (6 pads to 8 on 4 devices)."""
+    out = subproc("""
+        import numpy as np
+        from repro.core import EscgParams, dominance as dm
+        from repro.core.trials import run_trials
+        p = EscgParams(length=16, height=16, species=5, mobility=1e-4,
+                       seed=3, cell_dtype='int8')
+        dom = dm.RPSLS()
+        rs = {d: run_trials(p, dom, n_trials=6, n_mcs=8, trial_devices=d,
+                            chunk_mcs=3, stop_on_stasis=False)
+              for d in (1, 2, 4)}
+        base = rs[1]
+        for d in (2, 4):
+            r = rs[d]
+            assert r.n_devices == d
+            assert np.array_equal(r.survival, base.survival), d
+            assert np.array_equal(r.densities, base.densities), d
+            assert np.array_equal(r.stasis_mcs, base.stasis_mcs), d
+            assert np.array_equal(r.extinction_mcs,
+                                  base.extinction_mcs), d
+        print("POD_BIT_IDENTICAL")
+    """, n_devices=4)
+    assert "POD_BIT_IDENTICAL" in out
+
+
+@pytest.mark.slow
+def test_trials_default_pod_width_uses_all_devices(subproc):
+    """trial_devices=None shards over every local device and still matches
+    the explicit single-device run."""
+    out = subproc("""
+        import numpy as np
+        from repro.core import EscgParams, dominance as dm
+        from repro.core.trials import run_trials
+        p = EscgParams(length=12, height=12, species=3, seed=0)
+        r_all = run_trials(p, dm.RPS(), 5, n_mcs=4, stop_on_stasis=False)
+        r_one = run_trials(p, dm.RPS(), 5, n_mcs=4, trial_devices=1,
+                           stop_on_stasis=False)
+        assert r_all.n_devices == 4
+        assert np.array_equal(r_all.survival, r_one.survival)
+        assert np.array_equal(r_all.densities, r_one.densities)
+        print("POD_DEFAULT_OK")
+    """, n_devices=4)
+    assert "POD_DEFAULT_OK" in out
