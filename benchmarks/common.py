@@ -1,7 +1,11 @@
-"""Shared benchmark harness utilities (DESIGN.md §6). Every benchmark
+"""Shared benchmark harness utilities (DESIGN.md §7). Every benchmark
 prints ``name,us_per_call,derived`` CSV rows (brief requirement) plus a
 human summary to stderr; set ``BENCH_JSON=1`` to emit one JSON object per
-row instead (the format documented in benchmarks/README.md)."""
+row instead (the format documented in benchmarks/README.md).
+
+Set ``ESCG_BENCH_SMOKE=1`` to shrink every sweep to a tiny CI-sized
+configuration (``smoke()`` below) — tests/test_benchmarks.py runs each
+module this way so benchmark code can never silently rot."""
 from __future__ import annotations
 
 import json
@@ -11,6 +15,15 @@ import time
 from typing import Callable, Tuple
 
 import jax
+
+SMOKE = os.environ.get("ESCG_BENCH_SMOKE", "").lower() not in (
+    "", "0", "false", "no")
+
+
+def smoke(small, full):
+    """Pick the tiny smoke-test value under ESCG_BENCH_SMOKE, else the
+    real sweep value."""
+    return small if SMOKE else full
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,

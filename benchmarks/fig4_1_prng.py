@@ -12,9 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import emit, note, time_fn
+from .common import emit, note, smoke, time_fn
 
-N = 20_000_000
+N = smoke(500_000, 20_000_000)
 
 
 def run(n: int = N) -> None:
@@ -34,7 +34,7 @@ def run(n: int = N) -> None:
 
     # Pallas Philox kernel — interpret mode (CPU correctness harness)
     from repro.kernels import ops
-    n_small = min(n, 1_000_000)      # interpreter is slow; structural only
+    n_small = min(n, smoke(100_000, 1_000_000))  # interpreter is slow
     t_px = time_fn(lambda: ops.philox_bits(n_small, seed=(0, 1)),
                    warmup=1, iters=1)
     emit("prng_philox_pallas_interpret", t_px,

@@ -17,9 +17,9 @@ from repro.core.lattice import init_grid
 from repro.core.rng import proposal_batch
 from repro.core import batched
 
-from .common import emit, note, time_fn
+from .common import emit, note, smoke, time_fn
 
-MCS = 30
+MCS = smoke(3, 30)
 
 
 def run_one(L: int, n_sub: int) -> float:
@@ -51,8 +51,8 @@ def run_one(L: int, n_sub: int) -> float:
 
 def run() -> None:
     note(f"batched-engine window sweep, {MCS} MCS (paper Fig 4.2)")
-    for L in (32, 64):
-        for n_sub in (1, 2, 4, 8, 16, 32):
+    for L in smoke((32,), (32, 64)):
+        for n_sub in smoke((1, 4), (1, 2, 4, 8, 16, 32)):
             t = run_one(L, n_sub)
             window = L * L // n_sub
             emit(f"batch_sweep_L{L}_window{window}", t,

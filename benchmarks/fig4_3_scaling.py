@@ -28,22 +28,22 @@ import jax
 
 from repro.core import EscgParams, dominance as dm, engines
 
-from .common import emit, note, time_fn
+from .common import emit, note, smoke, time_fn
 
-MCS = 20
+MCS = smoke(2, 20)
 
 ENGINES_SWEPT = ("reference", "batched", "sublattice")
 
 
-def _params(engine: str, L: int) -> EscgParams:
+def _params(engine: str, L: int, **overrides) -> EscgParams:
     tile = (8, 16) if L >= 16 else (4, 8)
     return EscgParams(length=L, height=L, species=3, mobility=1e-4, mcs=MCS,
                       chunk_mcs=MCS, engine=engine, tile=tile, seed=0,
-                      empty=0.1)
+                      empty=0.1, **overrides)
 
 
-def run_engine(engine: str, L: int) -> float:
-    p = _params(engine, L)
+def run_engine(engine: str, L: int, **overrides) -> float:
+    p = _params(engine, L, **overrides)
     # measure a jitted chunk directly (excludes trace/compile, like the
     # paper excludes process startup)
     from repro.core.simulation import build_chunk_fn
@@ -62,12 +62,12 @@ def run_engine(engine: str, L: int) -> float:
 def run() -> None:
     note(f"engine scaling, {MCS} MCS per point (paper Fig 4.3/Table 4.1)")
     n_dev = len(jax.devices())
-    sizes = (32, 64, 128, 256)
+    sizes = smoke((32,), (32, 64, 128, 256))
     swept = ENGINES_SWEPT + (("sharded",) if n_dev > 1 else ())
     if n_dev > 1:
         note(f"sharded engine over {n_dev} devices "
              f"(ESCG_FAKE_DEVICES={os.environ.get('ESCG_FAKE_DEVICES', '')})")
-        sizes = sizes + (512,)     # past-single-device point of the sweep
+        sizes = sizes + smoke((), (512,))  # past-single-device sweep point
     base = {}
     for L in sizes:
         for engine in swept:
@@ -82,6 +82,16 @@ def run() -> None:
                        if ("reference", L) in base else float("nan"))
             emit(f"scaling_{engine}_L{L}", t,
                  f"{upd / 1e6:.2f} Mupd/s; vs_seq {speedup:.1f}x")
+    if n_dev > 1:
+        # local_kernel='pallas': the sharded engine's shard_map region runs
+        # the VMEM-tiled kernel path (bit-identical to jnp; on CPU the
+        # Pallas interpreter dominates, so keep it to the smallest size —
+        # the TPU number is the structural claim, DESIGN.md §6)
+        L = sizes[0]
+        t = run_engine("sharded", L, local_kernel="pallas")
+        emit(f"scaling_sharded_pallas_L{L}", t,
+             f"{MCS * L * L / t / 1e6:.2f} Mupd/s; local_kernel=pallas "
+             f"vs jnp {base[('sharded', L)] / t:.2f}x")
 
 
 if __name__ == "__main__":

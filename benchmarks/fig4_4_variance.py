@@ -18,9 +18,9 @@ from repro.core import EscgParams, dominance as dm
 from repro.core.lattice import init_grid
 from repro.core.simulation import build_chunk_fn
 
-from .common import emit, note
+from .common import emit, note, smoke
 
-L, TRIALS, CHUNK = 64, 10, 20
+L, TRIALS, CHUNK = smoke(16, 64), smoke(3, 10), smoke(5, 20)
 
 
 def run() -> None:

@@ -12,11 +12,11 @@ import numpy as np
 
 from repro.core.park import survival_probabilities
 
-from .common import emit, note, time_fn
+from .common import emit, note, smoke, time_fn
 
-GRID = (0.1, 0.5, 0.9)
-L = 32
-TRIALS = 8
+GRID = smoke((0.5,), (0.1, 0.5, 0.9))
+L = smoke(16, 32)
+TRIALS = smoke(2, 8)
 
 
 def run() -> None:

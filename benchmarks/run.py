@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §7).
 
 Prints ``name,us_per_call,derived`` CSV rows. Set BENCH_FAST=0 for the full
 (slower) settings.

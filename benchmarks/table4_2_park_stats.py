@@ -13,10 +13,10 @@ import time
 
 from repro.core.park import species5_extinction_std
 
-from .common import emit, note
+from .common import emit, note, smoke
 
-LS = (16, 24)
-MCS = (0, 200, 600)
+LS = smoke((16,), (16, 24))
+MCS = smoke((0, 100), (0, 200, 600))
 
 
 def run() -> None:
@@ -24,7 +24,7 @@ def run() -> None:
          "chunked trial driver")
     t0 = time.perf_counter()
     table = species5_extinction_std(LS, MCS, alpha=0.15, beta=0.75,
-                                    gamma=1.0, n_trials=6)
+                                    gamma=1.0, n_trials=smoke(3, 6))
     dt = time.perf_counter() - t0
     for i, m in enumerate(MCS):
         row = " ".join(f"L{l}:{table[i, j]:.3f}" for j, l in enumerate(LS))

@@ -17,9 +17,9 @@ import numpy as np
 from repro.core import EscgParams, dominance as dm
 from repro.core.trials import run_trials
 
-from .common import emit, note
+from .common import emit, note, smoke
 
-L, MCS, TRIALS = 64, 1200, 3
+L, MCS, TRIALS = smoke(32, 64), smoke(200, 1200), smoke(2, 3)
 
 
 def run() -> None:

@@ -8,7 +8,7 @@ dissertation's 100k-MCS experiments.
 
 (For the cluster-scale variant the same loop runs with
 repro.core.sharded.make_sharded_simulation on the production mesh —
-see tests/test_sharded.py.)
+see tests/test_sharded_engine.py.)
 """
 import argparse
 import os

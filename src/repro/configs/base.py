@@ -109,7 +109,7 @@ SHAPES: Dict[str, ShapeConfig] = {
 }
 
 # long_500k needs sub-quadratic attention state; only SSM/hybrid archs run it
-# (DESIGN.md §8) — pure full-attention archs record a documented skip.
+# (DESIGN.md §9) — pure full-attention archs record a documented skip.
 LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
 
 

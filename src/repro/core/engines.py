@@ -32,10 +32,25 @@ if TYPE_CHECKING:  # avoid a runtime cycle: params validates via this module
 
 
 class BuiltEngine(NamedTuple):
-    """A ready-to-run engine instance for one (params, dominance) pair."""
+    """A ready-to-run engine instance for one (params, dominance) pair.
+
+    ``one_mcs`` advances ONE lattice. Engines whose caps declare a ``pod``
+    mesh axis (DESIGN.md §6) additionally provide ``one_mcs_batch``, which
+    advances a whole batch of IID trial lattices laid out on a composed
+    ``('pod', 'rows', 'cols')`` mesh: ``batch_sharding``/``key_sharding``
+    are where the trial driver must place the stacked grids and per-trial
+    keys, and ``pod_width`` is the trial-axis device count the batch must
+    pad to.
+    """
     one_mcs: Callable[[jax.Array, jax.Array],
                       Tuple[jax.Array, jax.Array, jax.Array]]
     grid_sharding: Optional[jax.sharding.Sharding] = None
+    one_mcs_batch: Optional[Callable[[jax.Array, jax.Array],
+                                     Tuple[jax.Array, jax.Array,
+                                           jax.Array]]] = None
+    batch_sharding: Optional[jax.sharding.Sharding] = None
+    key_sharding: Optional[jax.sharding.Sharding] = None
+    pod_width: int = 1
 
 
 @dataclass(frozen=True)
@@ -49,12 +64,34 @@ class EngineCaps:
     trial_shardable: bool = True  # safe to shard the vmapped trial axis
                                # across devices (DESIGN.md §4); requires
                                # vmappable and no internal collectives
+    mesh_axes: Tuple[str, ...] = ()  # device-mesh axes the engine owns;
+                               # ('rows','cols') = grid decomposition (§5),
+                               # ('pod','rows','cols') = composed trial x
+                               # grid mesh (§6). Consumed by params
+                               # validation of params.mesh_shape and by the
+                               # trial runner's composition check.
+    local_kernels: Tuple[str, ...] = ()  # values of params.local_kernel the
+                               # engine accepts ('jnp', 'pallas'); empty =
+                               # the knob is ignored
+    equiv_oracle: Optional[str] = None  # engine this one is bit-identical
+                               # to at the one_mcs level (same key -> same
+                               # trajectory); drives the registry-wide
+                               # cross-engine equivalence suite
     description: str = ""
     paper: str = ""            # paper algorithm / figure it reproduces
 
     @property
+    def pod_composable(self) -> bool:
+        """True when the trial axis rides a ``pod`` mesh axis: the trial
+        driver may run IID batches of this engine on a composed
+        ``('pod', 'rows', 'cols')`` mesh (DESIGN.md §6)."""
+        return "pod" in self.mesh_axes
+
+    @property
     def trial_axis(self) -> str:
         """Human-readable trial-axis support (engine matrix column)."""
+        if self.pod_composable:
+            return "pod×grid composed mesh"
         if self.vmappable and self.trial_shardable:
             return "pod-sharded vmap"
         if self.vmappable:
@@ -100,7 +137,11 @@ def get_engine(name: str) -> EngineSpec:
 
 
 def validate_params(p: "EscgParams") -> None:
-    """Capability-driven validation (called from EscgParams.validate)."""
+    """Capability-driven validation (called from EscgParams.validate).
+
+    Mesh-layout legality lives HERE, with the registry, not with the
+    drivers: an engine's ``mesh_axes`` decide whether ``params.mesh_shape``
+    is meaningful and what rank it must have (DESIGN.md §6)."""
     spec = get_engine(p.engine)
     if spec.caps.flux_only and not p.flux:
         raise ValueError(
@@ -117,6 +158,28 @@ def validate_params(p: "EscgParams") -> None:
         dr, dc = p.shard_grid
         if dr < 1 or dc < 1:
             raise ValueError("shard_grid dims must be >= 1")
+    if p.local_kernel not in ("jnp", "pallas"):
+        raise ValueError("local_kernel must be 'jnp' or 'pallas'")
+    # engines that declare supported kernels accept exactly those; engines
+    # with no declaration ignore the knob (same rule as params.tile)
+    if spec.caps.local_kernels and \
+            p.local_kernel not in spec.caps.local_kernels:
+        raise ValueError(
+            f"engine {p.engine!r} supports local_kernel in "
+            f"{spec.caps.local_kernels}, got {p.local_kernel!r}")
+    if p.mesh_shape is not None:
+        if not spec.caps.pod_composable:
+            raise ValueError(
+                f"engine {p.engine!r} does not lay devices on a "
+                f"('pod','rows','cols') mesh (mesh_axes="
+                f"{spec.caps.mesh_axes}); mesh_shape only applies to "
+                "pod-composable engines like 'sharded_pod'")
+        if len(p.mesh_shape) != len(spec.caps.mesh_axes):
+            raise ValueError(
+                f"mesh_shape {p.mesh_shape} must have one entry per mesh "
+                f"axis {spec.caps.mesh_axes}")
+        if any(d < 1 for d in p.mesh_shape):
+            raise ValueError("mesh_shape dims must be >= 1")
 
 
 def build(params: "EscgParams", dom: jax.Array) -> BuiltEngine:
@@ -218,7 +281,7 @@ def _build_sublattice(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
 
 
 @register("pallas", EngineCaps(
-    flux_only=True, tiled=True,
+    flux_only=True, tiled=True, equiv_oracle="sublattice",
     description="sublattice round as a Pallas TPU kernel (VMEM-resident)",
     paper="maxStep §4.2.4, kernelized (Fig 4.3)"))
 def _build_pallas(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
@@ -253,10 +316,24 @@ def _build_pallas_fused(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
 
 @register("sharded", EngineCaps(
     flux_only=True, tiled=True, multi_device=True, vmappable=False,
-    trial_shardable=False,
+    trial_shardable=False, mesh_axes=("rows", "cols"),
+    local_kernels=("jnp", "pallas"), equiv_oracle="sublattice",
     description="domain-decomposed across devices: shard_map + ppermute "
                 "halo exchange, per-tile Philox streams, psum stasis counts",
     paper="size scaling beyond one device (Fig 4.3, L=3200)"))
 def _build_sharded(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
     from . import sharded as sharded_mod  # lazy: pulls parallel/ helpers
     return sharded_mod.build_engine(p, dom)
+
+
+@register("sharded_pod", EngineCaps(
+    flux_only=True, tiled=True, multi_device=True, vmappable=False,
+    trial_shardable=False, mesh_axes=("pod", "rows", "cols"),
+    local_kernels=("jnp", "pallas"), equiv_oracle="sublattice",
+    description="composed trial x grid mesh: IID trials sharded over "
+                "'pod', each lattice halo-exchanged over ('rows','cols'); "
+                "same per-tile streams as sharded",
+    paper="mass replication of large lattices (Fig 4.3 x Table 4.2)"))
+def _build_sharded_pod(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
+    from . import sharded_pod as pod_mod  # lazy: pulls parallel/ helpers
+    return pod_mod.build_engine(p, dom)

@@ -11,6 +11,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import re
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -53,6 +54,16 @@ class EscgParams:
     # sharded engine: (rows, cols) device grid; None = auto-factor all
     # local devices (parallel.sharding.auto_shard_grid)
     shard_grid: Optional[Tuple[int, int]] = None
+    # sharded_pod engine: (pod, rows, cols) composed device mesh — the
+    # trial axis shards over 'pod' while each trial's lattice is
+    # domain-decomposed over ('rows','cols'); None = all local devices on
+    # the pod axis (DESIGN.md §6). Which layouts are legal is decided by
+    # the engine's EngineCaps.mesh_axes, not by the drivers.
+    mesh_shape: Optional[Tuple[int, int, int]] = None
+    # tile sweep implementation inside the sharded engines' shard_map
+    # region: 'jnp' (vmapped lax.scan sweeps) or 'pallas' (the VMEM-tiled
+    # kernels.escg_update path, bit-identical)
+    local_kernel: str = "jnp"
 
     # ------------------------------------------------------------------ #
     @property
@@ -119,10 +130,21 @@ class EscgParams:
         d["tile"] = tuple(d["tile"])
         if d.get("shard_grid") is not None:
             d["shard_grid"] = tuple(d["shard_grid"])
+        if d.get("mesh_shape") is not None:
+            d["mesh_shape"] = tuple(d["mesh_shape"])
         return EscgParams(**d)
 
     def replace(self, **kw) -> "EscgParams":
         return dataclasses.replace(self, **kw)
+
+
+def _mesh_shape(s: str) -> Tuple[int, int, int]:
+    """Parse ``--meshShape P,R,C`` (also accepts 'PxRxC')."""
+    parts = [x for x in re.split(r"[,x]", s) if x]
+    if len(parts) != 3:
+        raise argparse.ArgumentTypeError(
+            f"meshShape must be P,R,C (three ints), got {s!r}")
+    return tuple(int(x) for x in parts)
 
 
 def add_cli_args(p: argparse.ArgumentParser) -> None:
@@ -155,6 +177,16 @@ def add_cli_args(p: argparse.ArgumentParser) -> None:
                    default=None,
                    help="(rows, cols) device grid for engine=sharded; "
                         "omit to auto-factor all local devices")
+    p.add_argument("--meshShape", dest="mesh_shape", type=_mesh_shape,
+                   default=None, metavar="P,R,C",
+                   help="composed (pod, rows, cols) device mesh for "
+                        "engine=sharded_pod: --trials shard over the pod "
+                        "axis, each lattice over (rows, cols); omit to put "
+                        "all local devices on the pod axis")
+    p.add_argument("--localKernel", dest="local_kernel", type=str,
+                   default="jnp", choices=("jnp", "pallas"),
+                   help="tile-sweep implementation inside the sharded "
+                        "engines' shard_map region (bit-identical paths)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--chunkMcs", dest="chunk_mcs", type=int, default=100)
     p.add_argument("--outDir", dest="out_dir", type=str, default="escg_out")
@@ -167,4 +199,6 @@ def params_from_args(args: argparse.Namespace) -> EscgParams:
         kw["tile"] = tuple(kw["tile"])
     if kw.get("shard_grid") is not None:
         kw["shard_grid"] = tuple(kw["shard_grid"])
+    if kw.get("mesh_shape") is not None:
+        kw["mesh_shape"] = tuple(kw["mesh_shape"])
     return EscgParams(**kw).validate()

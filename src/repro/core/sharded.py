@@ -42,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .engines import BuiltEngine, _tiled_setup
+from .lattice import DIRS
 from .rng import ProposalBatch, round_shift, tile_stream_batch
 from .sublattice import from_tiles, tile_update, to_tiles
 
@@ -107,7 +108,21 @@ def _local_tile_ids(block_shape: Tuple[int, int],
 
 def _update_tiles(local: jax.Array, props: ProposalBatch,
                   tile_shape: Tuple[int, int], t_eps: float, t_eps_mu: float,
-                  dom: jax.Array) -> jax.Array:
+                  dom: jax.Array, local_kernel: str = "jnp") -> jax.Array:
+    """Per-tile sequential sweeps over one device's block.
+
+    ``local_kernel`` selects the implementation (bit-identical paths, the
+    single-device `pallas` vs `sublattice` guarantee lifted into the
+    shard_map region): 'jnp' runs the vmapped ``tile_update`` scan, 'pallas'
+    runs the VMEM-tiled ``kernels.escg_update`` kernel on the local block —
+    one Pallas program per owned tile, proposals in local raster order.
+    """
+    if local_kernel == "pallas":
+        from ..kernels import escg_update, ops as kernel_ops  # lazy: cycles
+        return escg_update.escg_tile_round(
+            local, props.cell, props.dirn, props.u_act, props.u_dom,
+            dom, jnp.asarray(DIRS, jnp.int32), tile_shape, t_eps, t_eps_mu,
+            interpret=kernel_ops._default_interpret(None))
     th, tw = tile_shape
     tiles = to_tiles(local, th, tw)
     upd = jax.vmap(lambda t, c, d, a, u: tile_update(
@@ -123,6 +138,31 @@ def lattice_sharding(mesh: Mesh, row_axis: str = "rows",
     return NamedSharding(mesh, P(row_axis, col_axis))
 
 
+def make_local_round(p, dom, shard_grid: Tuple[int, int],
+                     row_axis: str = "rows", col_axis: str = "cols"):
+    """``local_round(gl, kp, shift)`` — one device-block's share of a
+    round: halo shift, regenerate the owned tiles' streams, sweep.
+
+    This is THE per-block computation both the ``sharded`` and the
+    composed ``sharded_pod`` builders run inside their shard_map regions
+    (sharded_pod vmaps it over its local trial slice); the cross-engine
+    bit-identity contract depends on there being exactly one copy.
+    """
+    t_eps, t_eps_mu = p.action_thresholds()
+    th, tw, _, k_per, interior = _tiled_setup(p)
+    gw = p.length // tw
+    dom_j = jnp.asarray(dom, jnp.float32)
+    dr, dc = shard_grid
+
+    def local_round(gl, kp, shift):
+        gl = shard_shift2d(gl, shift, (th, tw), (dr, dc), row_axis, col_axis)
+        tids = _local_tile_ids(gl.shape, (th, tw), gw, row_axis, col_axis)
+        props = tile_stream_batch(kp, tids, k_per, interior, p.neighbourhood)
+        return _update_tiles(gl, props, (th, tw), t_eps, t_eps_mu, dom_j,
+                             local_kernel=p.local_kernel)
+    return local_round
+
+
 def build_engine(params, dom: jax.Array,
                  mesh: Optional[Mesh] = None,
                  row_axis: str = "rows",
@@ -136,12 +176,9 @@ def build_engine(params, dom: jax.Array,
     from ..parallel.sharding import lattice_mesh  # lazy: parallel -> models
 
     p = params.validate()
-    t_eps, t_eps_mu = p.action_thresholds()
     # same bookkeeping as the single-device tiled engines — the bit-identity
     # guarantee depends on k_per/interior matching exactly
-    th, tw, n_tiles, k_per, interior = _tiled_setup(p)
-    gh, gw = p.height // th, p.length // tw
-    dom_j = jnp.asarray(dom, jnp.float32)
+    th, tw, n_tiles, k_per, _ = _tiled_setup(p)
 
     if mesh is None:
         mesh = lattice_mesh(p.shard_grid, p.height, p.length, th, tw,
@@ -153,12 +190,7 @@ def build_engine(params, dom: jax.Array,
             f"unions of {th}x{tw} tiles")
 
     grid_spec = P(row_axis, col_axis)
-
-    def local_round(gl, kp, shift):
-        gl = shard_shift2d(gl, shift, (th, tw), (dr, dc), row_axis, col_axis)
-        tids = _local_tile_ids(gl.shape, (th, tw), gw, row_axis, col_axis)
-        props = tile_stream_batch(kp, tids, k_per, interior, p.neighbourhood)
-        return _update_tiles(gl, props, (th, tw), t_eps, t_eps_mu, dom_j)
+    local_round = make_local_round(p, dom, (dr, dc), row_axis, col_axis)
 
     round_fn = shard_map(local_round, mesh=mesh,
                          in_specs=(grid_spec, P(), P()),
@@ -182,7 +214,8 @@ def sharded_run_round(grid: jax.Array, props: ProposalBatch,
                       t_eps: float, t_eps_mu: float, dom: jax.Array,
                       mesh: Mesh, row_axis: str = "data",
                       col_axis: str = "model",
-                      roll_back: bool = True) -> jax.Array:
+                      roll_back: bool = True,
+                      local_kernel: str = "jnp") -> jax.Array:
     """One shifted-window round with externally supplied proposals in
     global raster tile order, shape (T, K). Bit-identical to
     ``sublattice.run_round`` on the same inputs; jit-safe (all rolls happen
@@ -206,7 +239,8 @@ def sharded_run_round(grid: jax.Array, props: ProposalBatch,
         k = cell.shape[-1]
         props_l = ProposalBatch(cell.reshape(-1, k), dirn.reshape(-1, k),
                                 ua.reshape(-1, k), ud.reshape(-1, k))
-        gl = _update_tiles(gl, props_l, (th, tw), t_eps, t_eps_mu, dom)
+        gl = _update_tiles(gl, props_l, (th, tw), t_eps, t_eps_mu, dom,
+                           local_kernel=local_kernel)
         if roll_back:
             gl = shard_shift2d(gl, sh, (th, tw), (dr, dc), row_axis,
                                col_axis, reverse=True)

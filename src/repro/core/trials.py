@@ -74,7 +74,10 @@ class TrialResult:
     mcs_completed: int         # MCS every trial actually ran
     kept_fraction: float       # applied / attempted proposals (E2 audit)
     n_trials: int
-    n_devices: int             # pod-axis width the batch ran on
+    n_devices: int             # devices the batch ran on: the pod width
+                               # for vmapped engines, the full composed
+                               # ('pod','rows','cols') mesh size for
+                               # pod-composable engines (DESIGN.md §6)
 
     # --------------------------- statistics ---------------------------- #
     @property
@@ -150,12 +153,18 @@ def pad_trials(n_trials: int, n_devices: int) -> int:
 
 
 def trial_grids_and_keys(p: EscgParams, key: jax.Array, n_pad: int,
-                         sharding: Optional[NamedSharding] = None):
+                         sharding: Optional[NamedSharding] = None,
+                         grid_sharding: Optional[NamedSharding] = None):
     """Initial lattices + per-trial run keys for ``n_pad`` trials.
 
     Trial ``t``'s key is ``fold_in(key, t)`` (see module docstring); the
     lattice honours ``params.cell_dtype`` exactly like ``simulate`` does
     (the legacy vmap runner silently initialized int32 grids regardless).
+
+    ``sharding`` places the per-trial keys BEFORE init, so grids are born
+    distributed over the trial axis (never materialized on one device).
+    ``grid_sharding`` optionally resharding the grids afterwards — the
+    composed path (§6) uses it to add the ('rows','cols') lattice axes.
     """
     cell_dt = jnp.dtype(p.cell_dtype)
     trial_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
@@ -170,19 +179,59 @@ def trial_grids_and_keys(p: EscgParams, key: jax.Array, n_pad: int,
                               dtype=cell_dt)
         return g, kr
 
-    return jax.vmap(init_one)(trial_keys)
+    grids, keys = jax.vmap(init_one)(trial_keys)
+    if grid_sharding is not None:
+        grids = jax.device_put(grids, grid_sharding)
+    return grids, keys
 
 
 # ----------------------------- chunked driver ------------------------------ #
 
 def build_trial_chunk(p: EscgParams, dom: jax.Array,
-                      one_mcs: Optional[Callable] = None):
+                      one_mcs: Optional[Callable] = None,
+                      built: Optional[engines.BuiltEngine] = None):
     """chunk(grids, keys, n_mcs<static>) -> (grids, keys, final_counts,
-    alive[n, n_mcs, S], kept[n], attempts[n]); jitted, vmapped over the
-    leading trial axis, device-resident. ``alive`` is the only per-MCS
-    output and is what the host streams statistics from."""
+    alive[n, n_mcs, S], kept[n], attempts[n]); jitted, device-resident.
+    ``alive`` is the only per-MCS output and is what the host streams
+    statistics from.
+
+    Two shapes of engine fit this contract (DESIGN.md §4/§6):
+
+    * vmappable engines: ``one_mcs(grid, key)`` is vmapped over the
+      leading trial axis, the per-trial MCS loop is a ``lax.scan``;
+    * pod-composable engines (``built.one_mcs_batch`` non-None): the scan
+      runs at the batch level and each step advances the whole batch on
+      the composed ('pod','rows','cols') mesh.
+
+    Both thread per-trial keys identically (split once per MCS per
+    trial), so they are bit-identical for any engine pair whose one-MCS
+    functions are.
+    """
+    if built is not None and built.one_mcs_batch is not None:
+        one_mcs_batch = built.one_mcs_batch
+        s = p.species
+
+        @partial(jax.jit, static_argnames=("n_mcs",))
+        def chunk_batch(grids, keys, n_mcs: int):
+            zeros = jnp.zeros((grids.shape[0],), jnp.int32)
+
+            def body(carry, _):
+                g, k, kept, att = carry
+                both = jax.vmap(jax.random.split)(k)
+                k, k1 = both[:, 0], both[:, 1]
+                g, k2, a2 = one_mcs_batch(g, k1)
+                cnts = jax.vmap(lambda x: metrics.counts(x, s))(g)
+                return (g, k, kept + k2, att + a2), cnts
+            (g, k, kept, att), cnts = jax.lax.scan(
+                body, (grids, keys, zeros, zeros), length=n_mcs)
+            cnts = jnp.moveaxis(cnts, 0, 1)      # (n, n_mcs, S + 1)
+            return g, k, cnts[:, -1], cnts[:, :, 1:] > 0, kept, att
+
+        return chunk_batch
+
     if one_mcs is None:
-        one_mcs = engines.build(p, dom).one_mcs
+        one_mcs = (built.one_mcs if built is not None
+                   else engines.build(p, dom).one_mcs)
     s = p.species
 
     @partial(jax.jit, static_argnames=("n_mcs",))
@@ -229,6 +278,15 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
     when ``stop_on_stasis`` — exits early once every trial has reached
     stasis (see module docstring for the exact chunked semantics).
 
+    Pod-composable engines (``EngineCaps.mesh_axes`` containing 'pod',
+    e.g. ``engine='sharded_pod'``) run the same pipeline on a composed
+    ``('pod', 'rows', 'cols')`` mesh: trials shard over the pod axis while
+    every trial's lattice is additionally domain-decomposed with halo
+    exchange (DESIGN.md §6). The device layout comes from
+    ``params.mesh_shape`` (``trial_devices`` must stay None) and the batch
+    pads to the pod width only. Results are bit-identical to the vmapped
+    single-device path for any mesh factorization.
+
     ``hooks`` fire after every chunk with ``(mcs_done, alive_counts)``
     where ``alive_counts`` is the (n_trials,) number of species alive per
     trial at the chunk boundary.
@@ -238,12 +296,21 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
     """
     p = params.validate()
     spec = engines.get_engine(p.engine)
-    if not spec.caps.vmappable:
+    composed = spec.caps.pod_composable
+    if composed:
+        if trial_devices is not None:
+            raise ValueError(
+                f"engine {p.engine!r} lays devices on a composed "
+                "('pod','rows','cols') mesh — set the pod width through "
+                "params.mesh_shape, not trial_devices")
+    elif not spec.caps.vmappable:
         raise ValueError(
             f"engine {p.engine!r} is not vmappable (multi-device engines "
-            "decompose one lattice; run IID trials with a single-device "
-            "engine and shard the trial axis instead)")
-    if not spec.caps.trial_shardable and (trial_devices or 1) > 1:
+            "decompose one lattice); run IID trials with a single-device "
+            "engine and shard the trial axis, or compose the two axes "
+            "with engine='sharded_pod' (mesh_shape=(pod, rows, cols))")
+    if not composed and not spec.caps.trial_shardable \
+            and (trial_devices or 1) > 1:
         raise ValueError(f"engine {p.engine!r} does not support trial-axis "
                          "sharding; use trial_devices=1")
     if n_trials < 1:
@@ -261,13 +328,28 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
     chunk_len = int(chunk_mcs if chunk_mcs is not None
                     else max(1, min(p.chunk_mcs, n_mcs)))
 
-    sharding = (pod_sharding(trial_devices) if spec.caps.trial_shardable
-                else pod_sharding(1))
-    n_dev = sharding.mesh.devices.size
-    n_pad = pad_trials(n_trials, n_dev)
-
-    grids, keys = trial_grids_and_keys(p, key, n_pad, sharding)
-    chunk_fn = build_trial_chunk(p, dom_j)
+    if composed:
+        # composed pod x grid mesh (DESIGN.md §6): the engine owns the
+        # device layout; the driver only pads the batch to the pod width
+        # and places arrays on the engine's shardings.
+        built = engines.build(p, dom_j)
+        n_dev = built.batch_sharding.mesh.devices.size
+        n_pad = pad_trials(n_trials, built.pod_width)
+        # keys are placed pod-sharded BEFORE init, so every trial's grid
+        # is born on its pod group; the reshard then only splits each
+        # lattice over its group's ('rows','cols') axes — the full batch
+        # never materializes on a single device
+        grids, keys = trial_grids_and_keys(
+            p, key, n_pad, sharding=built.key_sharding,
+            grid_sharding=built.batch_sharding)
+        chunk_fn = build_trial_chunk(p, dom_j, built=built)
+    else:
+        sharding = (pod_sharding(trial_devices) if spec.caps.trial_shardable
+                    else pod_sharding(1))
+        n_dev = sharding.mesh.devices.size
+        n_pad = pad_trials(n_trials, n_dev)
+        grids, keys = trial_grids_and_keys(p, key, n_pad, sharding)
+        chunk_fn = build_trial_chunk(p, dom_j)
 
     s = p.species
     # species absent at initialization count as extinct at MCS 0

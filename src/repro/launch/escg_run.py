@@ -5,15 +5,22 @@ end-to-end driver of this framework's kind (simulation). Supports every
 registered engine, --save/--resume state round-trips, dominance CSV import,
 periodic snapshots and density export.
 
-Beyond the paper's CLI it exposes the two scaling axes (DESIGN.md §4-§5):
+Beyond the paper's CLI it exposes the two scaling axes and their
+composition (DESIGN.md §4-§6):
 
-* ``--engine sharded [--shardGrid R C]`` — one big lattice decomposed
-  across devices (grid axis).
+* ``--engine sharded [--shardGrid R C] [--localKernel pallas]`` — one big
+  lattice decomposed across devices (grid axis); ``--localKernel``
+  selects the in-region tile sweep implementation (bit-identical paths).
 * ``--trials N [--trialDevices D]`` — N IID replicate lattices, vmapped
   and sharded across devices over the trial axis (pod axis). Prints
   streamed survival / stasis statistics; with ``--save true`` the full
   ``TrialResult`` JSON lands in ``<outDir>/trials.json``. Results are
   bit-identical for any ``--trialDevices`` (per-trial fold-in PRNG keys).
+* ``--trials N --engine sharded_pod --meshShape P,R,C`` — BOTH axes at
+  once on a composed ('pod','rows','cols') mesh: trials shard over the
+  pod axis while every trial's lattice is domain-decomposed over
+  (rows, cols) with halo exchange. Bit-identical to the single-device
+  run for any factorization.
 
 Examples:
   python -m repro.launch.escg_run --length 200 --height 200 --mcs 2000 \
@@ -22,6 +29,9 @@ Examples:
       --outDir out/rps            # continue a saved run
   python -m repro.launch.escg_run --length 100 --height 100 --species 8 \
       --trials 64 --mcs 10000     # Park-style massed IID replication
+  python -m repro.launch.escg_run --length 800 --height 800 --species 8 \
+      --trials 16 --mcs 10000 --engine sharded_pod --meshShape 4,2,2 \
+      --tile 8 32                 # massed replication of LARGE lattices
   python -m repro.launch.escg_run --listEngines --markdown   # engine matrix
 """
 from __future__ import annotations

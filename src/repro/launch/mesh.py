@@ -30,5 +30,22 @@ def make_mesh(shape, axes):
     return _mesh(tuple(shape), tuple(axes))
 
 
+def make_composed_mesh(mesh_shape=None, *, height: int = 0, width: int = 0,
+                       tile=(8, 32)):
+    """The ESCG composed trial x grid mesh, ``('pod', 'rows', 'cols')``
+    (DESIGN.md §6). Thin wrapper over ``parallel.sharding.pod_lattice_mesh``
+    so launch scripts build it the same way the sharded_pod engine does;
+    pass height/width/tile to get the tile-divisibility validation, or
+    leave them 0 to skip it (pure layout construction)."""
+    from ..parallel.sharding import pod_lattice_mesh
+
+    if not height or not width:
+        import jax as _jax
+        n = len(_jax.devices())
+        shape = tuple(mesh_shape) if mesh_shape is not None else (n, 1, 1)
+        return _mesh(shape, ("pod", "rows", "cols"))
+    return pod_lattice_mesh(mesh_shape, height, width, tile[0], tile[1])
+
+
 def n_chips(mesh) -> int:
     return int(mesh.devices.size)

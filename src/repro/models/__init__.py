@@ -1,3 +1,3 @@
-"""Model stack for the assigned architectures (DESIGN.md §8)."""
+"""Model stack for the assigned architectures (DESIGN.md §9)."""
 from . import common, encdec, moe, registry, spec, ssm, transformer
 from .registry import Model, build_model

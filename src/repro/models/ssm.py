@@ -2,7 +2,7 @@
 
 Mamba-1 (falcon-mamba-7b): selective scan over a diagonal SSM, computed with
 a chunked associative scan (sequential across chunks, parallel within) — the
-same schedule idea as the ESCG sublattice engine (DESIGN.md §8).
+same schedule idea as the ESCG sublattice engine (DESIGN.md §9).
 Mamba-2 (zamba2-7b): SSD dual form — scalar-per-head decay, chunked matmul
 formulation (MXU-friendly).
 

@@ -1,4 +1,4 @@
-"""int8 error-feedback gradient compression (DESIGN.md §8).
+"""int8 error-feedback gradient compression (DESIGN.md §9).
 
 Motivation: on multi-pod meshes the gradient reduce-scatter/all-reduce over
 the DCN dominates the collective roofline term. Quantizing grads to int8

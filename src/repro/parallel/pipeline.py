@@ -1,4 +1,4 @@
-"""GPipe-style pipeline parallelism over a mesh axis (opt-in; DESIGN.md §8).
+"""GPipe-style pipeline parallelism over a mesh axis (opt-in; DESIGN.md §9).
 
 Layers are partitioned into `n_stages` contiguous blocks whose parameters
 shard over the pipeline mesh axis; microbatches stream through stages with
@@ -6,7 +6,7 @@ shard over the pipeline mesh axis; microbatches stream through stages with
 (n_micro + n_stages - 1 ticks; bubble fraction (S-1)/(M+S-1)).
 
 Scope: forward-pass building block + exactness test
-(tests/test_sharded.py::test_pipeline_matches_sequential). The production
+(tests/test_parallel_scaffold.py::test_pipeline_matches_sequential). The production
 meshes in this repo favour FSDP+TP (better roofline at 256-512 chips for
 the assigned archs); PP becomes the right trade at >2 pods where the DCN
 dominates — this module is the substrate for that regime.

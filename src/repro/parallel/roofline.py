@@ -1,4 +1,4 @@
-"""Roofline-term extraction from compiled XLA artifacts (DESIGN.md §7).
+"""Roofline-term extraction from compiled XLA artifacts (DESIGN.md §8).
 
 Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
 ~50 GB/s/link ICI (constants from the brief).

@@ -162,6 +162,44 @@ def auto_shard_grid(n_devices: int, height: int, width: int,
     return (1, 1)
 
 
+def pod_lattice_mesh(mesh_shape, height: int, width: int,
+                     tile_h: int, tile_w: int, pod_axis: str = "pod",
+                     row_axis: str = "rows", col_axis: str = "cols",
+                     devices=None) -> Mesh:
+    """Composed ``('pod', 'rows', 'cols')`` mesh for the sharded_pod
+    engine (DESIGN.md §6): the trial axis shards over ``pod`` while each
+    trial's lattice domain-decomposes over ``(rows, cols)``.
+
+    ``mesh_shape=None`` puts every local device on the pod axis —
+    replication throughput is the common regime, and a ``(D, 1, 1)``
+    layout needs no halo traffic at all. Pass an explicit ``(P, R, C)``
+    to spend devices on the grid axes instead (lattices too big for one
+    device's memory). The (rows, cols) factors obey the same constraint
+    as the sharded engine: every device block must be a union of
+    (tile_h, tile_w) tiles."""
+    import numpy as np
+
+    if devices is None:
+        devices = jax.devices()
+    if mesh_shape is None:
+        mesh_shape = (len(devices), 1, 1)
+    pp, dr, dc = mesh_shape
+    if pp < 1 or dr < 1 or dc < 1:
+        raise ValueError(f"mesh_shape dims must be >= 1, got {mesh_shape}")
+    if pp * dr * dc > len(devices):
+        raise ValueError(f"mesh_shape {tuple(mesh_shape)} needs "
+                         f"{pp * dr * dc} devices; only {len(devices)} "
+                         "available")
+    if height % dr or (height // dr) % tile_h:
+        raise ValueError(f"rows={dr} must split height={height} into "
+                         f"multiples of tile_h={tile_h}")
+    if width % dc or (width // dc) % tile_w:
+        raise ValueError(f"cols={dc} must split width={width} into "
+                         f"multiples of tile_w={tile_w}")
+    dev = np.asarray(devices[:pp * dr * dc]).reshape(pp, dr, dc)
+    return Mesh(dev, (pod_axis, row_axis, col_axis))
+
+
 def lattice_mesh(shard_grid, height: int, width: int,
                  tile_h: int, tile_w: int, row_axis: str = "rows",
                  col_axis: str = "cols", devices=None) -> Mesh:

@@ -1,7 +1,7 @@
 """Sharded checkpointing: save/restore arbitrary pytrees of (possibly
 distributed) arrays with a manifest + per-leaf .npy payloads.
 
-Design (1000+-node posture, DESIGN.md §8):
+Design (1000+-node posture, DESIGN.md §9):
   * every leaf is written per-addressable-shard with its global index
     bounds, so each HOST writes only its local shards (no gather);
   * restore is sharding-agnostic: any mesh/sharding can load any checkpoint

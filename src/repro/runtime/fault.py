@@ -1,5 +1,5 @@
 """Fault tolerance: checkpoint/restart loop, straggler monitor, elastic
-remesh (DESIGN.md §8).
+remesh (DESIGN.md §9).
 
 The paper's --resume flag is the single-process version of this; here the
 same manifest-driven checkpoints back a restart-on-failure training loop and

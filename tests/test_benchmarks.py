@@ -1,0 +1,70 @@
+"""Benchmark smoke tests: every benchmarks/*.py module runs end-to-end in
+its tiny ``ESCG_BENCH_SMOKE=1`` configuration (benchmarks/common.py) and
+emits at least one well-formed CSV row — benchmark code can never silently
+rot behind the paper figures it reproduces (DESIGN.md §7)."""
+import glob
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# roofline_table legitimately emits nothing without dry-run records; it
+# must still exit cleanly
+_MAY_BE_EMPTY = {"roofline_table"}
+
+MODULES = sorted(
+    os.path.basename(p)[:-3]
+    for p in glob.glob(os.path.join(REPO, "benchmarks", "*.py"))
+    if os.path.basename(p) not in ("common.py", "run.py", "__init__.py"))
+
+
+def _run_smoke(module: str, extra_env=None) -> str:
+    env = dict(os.environ)
+    env["ESCG_BENCH_SMOKE"] = "1"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env.update(extra_env or {})
+    out = subprocess.run(
+        [sys.executable, "-m", f"benchmarks.{module}"], cwd=REPO,
+        capture_output=True, text=True, timeout=420, env=env)
+    assert out.returncode == 0, (
+        f"benchmarks.{module} smoke run failed:\nSTDOUT:\n{out.stdout}\n"
+        f"STDERR:\n{out.stderr}")
+    return out.stdout
+
+
+def _assert_csv_rows(module: str, stdout: str) -> None:
+    rows = [ln for ln in stdout.splitlines()
+            if ln and not ln.startswith("#")]
+    if module in _MAY_BE_EMPTY and not rows:
+        return
+    assert rows, f"benchmarks.{module} emitted no CSV rows:\n{stdout}"
+    for ln in rows:
+        parts = ln.split(",")
+        assert len(parts) >= 2, f"malformed row from {module}: {ln!r}"
+        float(parts[1])          # us_per_call must parse
+        assert "ERROR" not in ln, f"benchmark errored: {ln!r}"
+
+
+def test_modules_discovered():
+    assert len(MODULES) >= 9, MODULES
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("module", MODULES)
+def test_benchmark_smoke(module):
+    _assert_csv_rows(module, _run_smoke(module))
+
+
+@pytest.mark.slow
+def test_trials_throughput_smoke_multi_device():
+    """The pod / composed-mesh sweeps need >1 device to be meaningful —
+    smoke them on 4 fake devices (covers the sharded_pod benchmark path)."""
+    stdout = _run_smoke(
+        "trials_throughput",
+        extra_env={"XLA_FLAGS": "--xla_force_host_platform_device_count=4"})
+    _assert_csv_rows("trials_throughput", stdout)
+    assert "trials_composed_" in stdout, stdout

@@ -1,0 +1,123 @@
+"""Registry-driven cross-engine equivalence suite (DESIGN.md §2/§6).
+
+Every test in this module parametrizes over ``engines.engine_names()`` —
+new engines are covered the moment they register, with zero test edits:
+
+* every engine must run through ``simulate`` deterministically and
+  conserve cell counts;
+* engines declaring ``EngineCaps.equiv_oracle`` must be bit-identical to
+  that oracle at the one-MCS level (grids, kept, attempts) — this is how
+  ``pallas``/``sharded``/``sharded_pod`` inherit the ``sublattice``
+  trajectory guarantee;
+* engines the trial driver accepts (vmappable or pod-composable) must
+  produce bit-identical ``run_trials`` statistics to their oracle's
+  vmapped path.
+
+Runs on whatever devices the process has: on one CPU device the
+multi-device engines collapse to 1x1 layouts; under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+composed-mesh job) the same assertions exercise real multi-device
+placement — bit-identity for ANY layout is exactly the invariant under
+test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EscgParams, dominance as dm, engines, simulate
+from repro.core.lattice import init_grid
+from repro.core.trials import run_trials
+
+H, W, TILE, SPECIES, N_MCS = 16, 32, (8, 16), 5, 3
+
+
+def _params(name: str, **overrides) -> EscgParams:
+    kw = dict(length=W, height=H, species=SPECIES, mobility=1e-3,
+              empty=0.1, seed=5, engine=name, tile=TILE, mcs=N_MCS,
+              chunk_mcs=N_MCS)
+    kw.update(overrides)
+    return EscgParams(**kw).validate()
+
+
+def _dom():
+    return dm.circulant(SPECIES, (1, 2))
+
+
+def _mcs_trajectory(p: EscgParams, n_mcs: int = N_MCS):
+    """(grids, kepts, attempts) per MCS from the built engine, driven with
+    the same fold-in key schedule for every engine."""
+    dom_j = jnp.asarray(_dom(), jnp.float32)
+    eng = engines.build(p, dom_j)
+    key = jax.random.PRNGKey(p.seed)
+    key, k0 = jax.random.split(key)
+    grid = init_grid(k0, p.height, p.length, p.species, p.empty)
+    if eng.grid_sharding is not None:
+        grid = jax.device_put(grid, eng.grid_sharding)
+    grids, kepts, atts = [], [], []
+    for i in range(n_mcs):
+        grid, kept, att = eng.one_mcs(grid, jax.random.fold_in(key, i))
+        grids.append(np.asarray(grid))
+        kepts.append(int(kept))
+        atts.append(int(att))
+    return grids, kepts, atts
+
+
+@pytest.mark.parametrize("name", engines.engine_names())
+def test_engine_is_deterministic_and_conserves_cells(name):
+    """Same params + key -> bit-identical trajectory across two
+    independent builds; every MCS conserves the cell count."""
+    p = _params(name)
+    r1 = simulate(p, _dom(), stop_on_stasis=False)
+    r2 = simulate(p, _dom(), stop_on_stasis=False)
+    np.testing.assert_array_equal(r1.grid, r2.grid)
+    np.testing.assert_array_equal(r1.densities, r2.densities)
+    np.testing.assert_allclose(r1.densities.sum(axis=1), 1.0, atol=1e-6)
+    assert r1.mcs_completed == N_MCS
+
+
+@pytest.mark.parametrize("name", engines.engine_names())
+def test_engine_matches_declared_oracle(name):
+    """caps.equiv_oracle is a bit-identity CONTRACT: same key, same
+    grids/kept/attempts every MCS. Engines without an oracle (the oracles
+    themselves, and engines with their own PRNG schemes like pallas_fused)
+    skip."""
+    oracle = engines.get_engine(name).caps.equiv_oracle
+    if oracle is None:
+        pytest.skip(f"engine {name!r} declares no equivalence oracle")
+    g_a, k_a, t_a = _mcs_trajectory(_params(name))
+    g_b, k_b, t_b = _mcs_trajectory(_params(oracle))
+    assert k_a == k_b and t_a == t_b
+    for i, (ga, gb) in enumerate(zip(g_a, g_b)):
+        np.testing.assert_array_equal(ga, gb, err_msg=f"MCS {i + 1}")
+
+
+@pytest.mark.parametrize("name", engines.engine_names())
+def test_trial_driver_matches_oracle(name):
+    """run_trials statistics are bit-identical to the oracle engine's
+    trial batch — covers the vmapped path (e.g. pallas) AND the composed
+    pod x grid path (sharded_pod) with one assertion."""
+    spec = engines.get_engine(name)
+    if not (spec.caps.vmappable or spec.caps.pod_composable):
+        pytest.skip(f"engine {name!r} cannot run trial batches")
+    if spec.caps.equiv_oracle is None:
+        pytest.skip(f"engine {name!r} declares no equivalence oracle")
+    dom = _dom()
+    r = run_trials(_params(name), dom, n_trials=3, n_mcs=N_MCS,
+                   stop_on_stasis=False)
+    ro = run_trials(_params(spec.caps.equiv_oracle), dom, n_trials=3,
+                    n_mcs=N_MCS, stop_on_stasis=False)
+    np.testing.assert_array_equal(r.survival, ro.survival)
+    np.testing.assert_array_equal(r.densities, ro.densities)
+    np.testing.assert_array_equal(r.stasis_mcs, ro.stasis_mcs)
+    np.testing.assert_array_equal(r.extinction_mcs, ro.extinction_mcs)
+
+
+def test_every_oracle_is_registered():
+    """equiv_oracle names must resolve — a typo would silently skip the
+    equivalence tests above."""
+    for spec in engines.engine_specs():
+        if spec.caps.equiv_oracle is not None:
+            assert spec.caps.equiv_oracle in engines.engine_names(), \
+                f"{spec.name} declares unknown oracle {spec.caps.equiv_oracle}"
+            assert spec.caps.equiv_oracle != spec.name

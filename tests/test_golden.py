@@ -1,0 +1,116 @@
+"""Golden regression fixtures: frozen trajectories under tests/golden/.
+
+The bit-identity guarantees in this repo (DESIGN.md §3) are all *relative*
+— engine A equals engine B, layout X equals layout Y. A change that shifts
+EVERY engine's PRNG consumption or update order in lockstep (e.g. an extra
+key split in the driver, a reordered proposal field) would sail through
+those tests. The goldens pin the *absolute* trajectories: a tiny
+``reference``-engine run (per-MCS grid hashes + densities) and a
+``sublattice``-family ``TrialResult``, checked in as JSON. Any drift in
+PRNG streams, update order, or the streamed statistics pipeline fails
+here, even on single-device CI.
+
+Regenerate (ONLY when a change intentionally redefines trajectories):
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+"""
+import hashlib
+import json
+import os
+
+import numpy as np
+
+from repro.core import EscgParams, dominance as dm, simulate
+from repro.core.trials import run_trials
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+TRAJ_PATH = os.path.join(GOLDEN_DIR, "reference_trajectory.json")
+TRIALS_PATH = os.path.join(GOLDEN_DIR, "trial_result.json")
+
+# frozen configs — changing these invalidates the fixtures, regenerate
+TRAJ_PARAMS = EscgParams(length=12, height=12, species=3, mcs=5,
+                         chunk_mcs=1, engine="reference", mobility=1e-3,
+                         empty=0.1, seed=42)
+TRIAL_PARAMS = EscgParams(length=16, height=16, species=5, mobility=1e-3,
+                          engine="sublattice", tile=(8, 8), empty=0.1,
+                          seed=7)
+TRIAL_N, TRIAL_MCS, TRIAL_CHUNK = 4, 6, 3
+
+
+def _grid_hash(grid: np.ndarray) -> str:
+    """Platform-stable lattice digest: little-endian int32 raster bytes."""
+    return hashlib.sha256(
+        np.ascontiguousarray(grid.astype("<i4")).tobytes()).hexdigest()
+
+
+def _run_trajectory():
+    hashes = []
+    simulate(TRAJ_PARAMS, dm.RPS(), stop_on_stasis=False,
+             hooks=[lambda mcs, grid, cnts:
+                    hashes.append(_grid_hash(np.asarray(grid)))])
+    res = simulate(TRAJ_PARAMS, dm.RPS(), stop_on_stasis=False)
+    return {
+        "params": json.loads(TRAJ_PARAMS.to_json()),
+        "grid_hashes": hashes,                       # one per MCS
+        "densities": np.asarray(res.densities).tolist(),  # row 0 = init
+        "final_hash": _grid_hash(res.grid),
+        "kept_fraction": res.kept_fraction,
+    }
+
+
+def _run_trials_golden() -> str:
+    return run_trials(TRIAL_PARAMS, dm.RPSLS(), TRIAL_N, n_mcs=TRIAL_MCS,
+                      chunk_mcs=TRIAL_CHUNK, stop_on_stasis=False).to_json()
+
+
+def test_reference_trajectory_matches_golden():
+    with open(TRAJ_PATH) as f:
+        want = json.load(f)
+    got = _run_trajectory()
+    assert got["grid_hashes"] == want["grid_hashes"], (
+        "reference-engine trajectory drifted from tests/golden/ — PRNG "
+        "stream or update order changed; regenerate only if intentional")
+    assert got["final_hash"] == want["final_hash"]
+    np.testing.assert_array_equal(np.asarray(got["densities"]),
+                                  np.asarray(want["densities"]))
+    assert got["kept_fraction"] == want["kept_fraction"]
+    assert got["params"] == want["params"]
+
+
+def test_trial_result_matches_golden():
+    with open(TRIALS_PATH) as f:
+        want = json.load(f)
+    got = json.loads(_run_trials_golden())
+    # n_devices legitimately varies with the host (pod width); everything
+    # else — survival, densities, stasis/extinction MCS, kept — must not
+    want.pop("n_devices"), got.pop("n_devices")
+    assert got == want, (
+        "TrialResult drifted from tests/golden/ — trial keying, streamed "
+        "statistics, or update order changed; regenerate only if "
+        "intentional")
+
+
+def test_goldens_are_checked_in():
+    """The fixtures must live in git, not be produced on the fly."""
+    for path in (TRAJ_PATH, TRIALS_PATH):
+        assert os.path.exists(path), (
+            f"{path} missing — run: PYTHONPATH=src python "
+            "tests/test_golden.py --regen")
+
+
+def _regen():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    with open(TRAJ_PATH, "w") as f:
+        json.dump(_run_trajectory(), f, indent=1)
+    with open(TRIALS_PATH, "w") as f:
+        f.write(_run_trials_golden())
+    print(f"regenerated {TRAJ_PATH} and {TRIALS_PATH}")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

@@ -1,0 +1,96 @@
+"""Multi-device LM-scaffold correctness (DESIGN.md §9): dry-run lowering,
+elastic resharding, pipeline parallelism. Moved out of the former
+tests/test_sharded.py — the ESCG sharded-engine tests live in
+tests/test_sharded_engine.py. Subprocesses set fake device counts so unit
+tests keep seeing the single real CPU device."""
+import pytest
+
+
+@pytest.mark.slow
+def test_mini_dryrun_lowers_on_fake_mesh(subproc):
+    """End-to-end pjit lowering on a small fake mesh for one dense and the
+    hybrid arch (the full 512-device sweep runs via launch/dryrun)."""
+    out = subproc("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_arch
+        from repro.configs.base import ShapeConfig
+        from repro.launch.dryrun import _compile_cell
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.sharding import make_rules
+
+        mesh = make_mesh((2, 2), ("data", "model"))
+        for arch in ("granite-3-8b", "zamba2-7b"):
+            cfg = get_arch(arch).reduced().replace(
+                n_layers=4, scan_layers=True, attn_every=2)
+            shape = ShapeConfig("t", 64, 4, "train")
+            rules = make_rules(mesh, {}, "train", 4)
+            compiled, _ = _compile_cell(cfg, shape, mesh, rules)
+            assert compiled.cost_analysis() is not None
+            print("LOWERED", arch)
+    """, n_devices=4)
+    assert out.count("LOWERED") == 2
+
+
+@pytest.mark.slow
+def test_elastic_reshard(subproc):
+    """Checkpoint on an 8-device mesh, restore onto a 2-device layout —
+    elastic scaling path (DESIGN.md §5)."""
+    out = subproc("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.runtime.checkpoint import CheckpointManager
+        from repro.runtime.fault import elastic_restore
+
+        d = tempfile.mkdtemp()
+        mesh8 = make_mesh((4, 2), ("data", "model"))
+        x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        xs = jax.device_put(x, NamedSharding(mesh8, P("data", "model")))
+        cm = CheckpointManager(d)
+        cm.save(3, {"w": xs})
+
+        mesh2 = make_mesh((2,), ("data",))
+        sh = {"w": NamedSharding(mesh2, P("data"))}
+        step, got = elastic_restore(cm, sh)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(x))
+        assert len(got["w"].sharding.device_set) == 2
+        print("RESHARDED")
+    """, n_devices=8)
+    assert "RESHARDED" in out
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential(subproc):
+    """GPipe pipeline over 4 stages == sequential layer composition."""
+    out = subproc("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.pipeline import pipeline_apply
+
+        mesh = make_mesh((4,), ("stage",))
+        k = jax.random.PRNGKey(0)
+        stages, d = 4, 16
+        w1 = jax.random.normal(k, (stages, d, 32)) * 0.1
+        w2 = jax.random.normal(jax.random.fold_in(k, 1),
+                               (stages, 32, d)) * 0.1
+        params = {"w1": w1, "w2": w2}
+        x = jax.random.normal(jax.random.fold_in(k, 2), (8, d))
+
+        def block(p, h):
+            return h + jax.nn.gelu(h @ p["w1"]) @ p["w2"]
+
+        want = x
+        for i in range(stages):
+            want = block({"w1": w1[i], "w2": w2[i]}, want)
+
+        got = pipeline_apply(block, params, x, n_micro=4, mesh=mesh)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        # also exercise a bubble-heavy config (n_micro == 1)
+        got1 = pipeline_apply(block, params, x, n_micro=1, mesh=mesh)
+        np.testing.assert_allclose(np.asarray(got1), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        print("PIPELINE_OK")
+    """, n_devices=4)
+    assert "PIPELINE_OK" in out

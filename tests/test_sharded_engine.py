@@ -1,7 +1,12 @@
-"""The registry-driven sharded halo-exchange engine.
+"""The sharded (grid-axis) and sharded_pod (composed) engines — ONE
+module, parametrized over the in-region tile-sweep implementation
+(``local_kernel``: jnp vs pallas; the two paths are bit-identical by
+contract). Merges the former tests/test_sharded.py ESCG tests.
 
 Single-device tests run on the real CPU device (a 1x1 lattice mesh);
-multi-device tests spawn subprocesses with fake CPU devices (see conftest).
+multi-device tests spawn subprocesses with fake CPU devices (see
+conftest). LM-scaffold multi-device tests live in
+tests/test_parallel_scaffold.py.
 """
 import jax
 import jax.numpy as jnp
@@ -16,18 +21,23 @@ except ImportError:   # hermetic container: deterministic fallback sampler
 from repro.core import EscgParams, dominance as dm, engines, simulate
 from repro.core.lattice import init_grid
 
+LOCAL_KERNELS = ("jnp", "pallas")
+
 
 # --------------------- N=1 shard == sublattice engine --------------------- #
 
 @given(seed=st.integers(0, 10_000), species=st.integers(2, 6),
        cfg=st.sampled_from([(16, 32, 8, 16), (24, 24, 8, 8),
                             (16, 16, 4, 8)]),
-       nbhd=st.sampled_from([4, 8]))
+       nbhd=st.sampled_from([4, 8]),
+       local_kernel=st.sampled_from(LOCAL_KERNELS))
 @settings(max_examples=10, deadline=None)
 def test_sharded_single_shard_bit_identical_to_sublattice(seed, species,
-                                                          cfg, nbhd):
+                                                          cfg, nbhd,
+                                                          local_kernel):
     """A sharded run with one shard is bit-identical to the sublattice
-    engine: same per-tile Philox streams, same shifted-window sweeps."""
+    engine — for BOTH tile-sweep implementations: same per-tile Philox
+    streams, same shifted-window sweeps."""
     h, w, th, tw = cfg
     kw = dict(length=w, height=h, species=species, neighbourhood=nbhd,
               tile=(th, tw), seed=seed, mobility=1e-3, empty=0.1)
@@ -36,7 +46,7 @@ def test_sharded_single_shard_bit_identical_to_sublattice(seed, species,
 
     sub = engines.build(EscgParams(engine="sublattice", **kw), dom_j)
     shd = engines.build(EscgParams(engine="sharded", shard_grid=(1, 1),
-                                   **kw), dom_j)
+                                   local_kernel=local_kernel, **kw), dom_j)
     key = jax.random.PRNGKey(seed)
     key, k0 = jax.random.split(key)
     g_sub = init_grid(k0, h, w, species, 0.1)
@@ -49,18 +59,41 @@ def test_sharded_single_shard_bit_identical_to_sublattice(seed, species,
     assert jnp.array_equal(g_sub, g_shd)
 
 
-def test_sharded_through_simulate_single_device():
+@pytest.mark.parametrize("local_kernel", LOCAL_KERNELS)
+def test_sharded_through_simulate_single_device(local_kernel):
     """Full driver path: engine='sharded' on one device tracks
     engine='sublattice' exactly (grids, densities, stasis accounting)."""
     kw = dict(length=32, height=16, species=3, mcs=6, chunk_mcs=3,
               tile=(8, 8), seed=0, mobility=1e-3, empty=0.1)
     r1 = simulate(EscgParams(engine="sublattice", **kw),
                   stop_on_stasis=False)
-    r2 = simulate(EscgParams(engine="sharded", **kw), stop_on_stasis=False)
+    r2 = simulate(EscgParams(engine="sharded", local_kernel=local_kernel,
+                             **kw), stop_on_stasis=False)
     np.testing.assert_array_equal(r1.grid, r2.grid)
     np.testing.assert_allclose(r1.densities, r2.densities, atol=0)
     assert r1.mcs_completed == r2.mcs_completed
 
+
+@pytest.mark.parametrize("local_kernel", LOCAL_KERNELS)
+def test_sharded_pod_through_trials_single_device(local_kernel):
+    """Composed-engine driver path on one device: run_trials with a
+    (1,1,1) mesh tracks the vmapped sublattice trial batch exactly."""
+    from repro.core.trials import run_trials
+    kw = dict(length=16, height=16, species=5, mobility=1e-3, tile=(8, 8),
+              empty=0.1, seed=4)
+    dom = dm.RPSLS()
+    base = run_trials(EscgParams(engine="sublattice", **kw), dom, 3,
+                      n_mcs=4, stop_on_stasis=False)
+    r = run_trials(EscgParams(engine="sharded_pod", mesh_shape=(1, 1, 1),
+                              local_kernel=local_kernel, **kw), dom, 3,
+                   n_mcs=4, stop_on_stasis=False)
+    np.testing.assert_array_equal(r.survival, base.survival)
+    np.testing.assert_array_equal(r.densities, base.densities)
+    np.testing.assert_array_equal(r.stasis_mcs, base.stasis_mcs)
+    np.testing.assert_array_equal(r.extinction_mcs, base.extinction_mcs)
+
+
+# ------------------------- capability validation --------------------------- #
 
 def test_sharded_rejects_infeasible_grid():
     p = EscgParams(length=32, height=16, engine="sharded", tile=(8, 8),
@@ -76,7 +109,136 @@ def test_run_trials_rejects_sharded():
                               tile=(8, 8)), dm.RPS(), n_trials=2, n_mcs=1)
 
 
+def test_mesh_shape_legality_is_registry_driven():
+    """EngineCaps.mesh_axes (not the drivers) decide which layouts are
+    legal: mesh_shape on a non-composable engine, wrong rank, and bad dims
+    all fail at params validation."""
+    with pytest.raises(ValueError, match="pod-composable"):
+        EscgParams(engine="sublattice", tile=(8, 8), length=16, height=16,
+                   mesh_shape=(1, 1, 1)).validate()
+    with pytest.raises(ValueError, match="pod-composable"):
+        EscgParams(engine="sharded", tile=(8, 8), length=16, height=16,
+                   mesh_shape=(1, 1, 1)).validate()
+    with pytest.raises(ValueError, match="dims must be >= 1"):
+        EscgParams(engine="sharded_pod", tile=(8, 8), length=16, height=16,
+                   mesh_shape=(0, 1, 1)).validate()
+    # legal on the composed engine
+    EscgParams(engine="sharded_pod", tile=(8, 8), length=16, height=16,
+               mesh_shape=(1, 1, 1)).validate()
+
+
+def test_local_kernel_validation():
+    with pytest.raises(ValueError, match="local_kernel"):
+        EscgParams(engine="sharded", tile=(8, 8), length=16, height=16,
+                   local_kernel="cuda").validate()
+    # engines that declare supported kernels accept exactly those
+    EscgParams(engine="sharded", tile=(8, 8), length=16, height=16,
+               local_kernel="pallas").validate()
+    # engines that don't consume the knob ignore it (same rule as tile)
+    EscgParams(engine="batched", local_kernel="pallas").validate()
+
+
+def test_sharded_pod_rejects_trial_devices():
+    from repro.core.trials import run_trials
+    with pytest.raises(ValueError, match="mesh_shape"):
+        run_trials(EscgParams(engine="sharded_pod", tile=(8, 8), length=16,
+                              height=16), dm.RPS(), n_trials=2, n_mcs=1,
+                   trial_devices=2)
+
+
+def test_mesh_shape_needs_enough_devices():
+    p = EscgParams(engine="sharded_pod", tile=(8, 8), length=16, height=16,
+                   mesh_shape=(64, 1, 1))
+    with pytest.raises(ValueError, match="devices"):
+        engines.build(p, jnp.asarray(dm.RPS()))
+
+
+def test_make_composed_mesh_axes():
+    """launch.mesh builds the same ('pod','rows','cols') layout the
+    sharded_pod engine uses, with or without lattice validation."""
+    from repro.launch.mesh import make_composed_mesh
+    m = make_composed_mesh((1, 1, 1))
+    assert m.axis_names == ("pod", "rows", "cols")
+    m2 = make_composed_mesh((1, 1, 1), height=16, width=16, tile=(8, 8))
+    assert (m2.shape["pod"], m2.shape["rows"], m2.shape["cols"]) == (1, 1, 1)
+    # rejected either for the device budget (1 device) or, with enough
+    # devices, because cols=2 cannot split width 16 into 16-wide tiles
+    with pytest.raises(ValueError):
+        make_composed_mesh((1, 1, 2), height=16, width=16, tile=(8, 16))
+
+
+def test_mesh_shape_cli_parser():
+    from repro.core.params import _mesh_shape
+    assert _mesh_shape("2,2,2") == (2, 2, 2)
+    assert _mesh_shape("4x1x2") == (4, 1, 2)
+    import argparse
+    with pytest.raises(argparse.ArgumentTypeError):
+        _mesh_shape("2,2")
+
+
 # ----------------------------- multi-device ------------------------------- #
+
+@pytest.mark.slow
+@pytest.mark.parametrize("local_kernel", LOCAL_KERNELS)
+def test_sharded_escg_equals_single_device(subproc, local_kernel):
+    """The shard_map spatial decomposition is bit-identical to the
+    single-device sublattice engine on a 4x4 device mesh, with externally
+    supplied proposals, for both tile-sweep implementations."""
+    out = subproc(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import dominance as dm
+        from repro.core.lattice import init_grid
+        from repro.core.rng import tile_proposal_batch, round_shift
+        from repro.core.sharded import sharded_run_round
+        from repro.core.sublattice import run_round
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((4, 4), ("data", "model"))
+        h, w, th, tw = 32, 64, 8, 16
+        key = jax.random.PRNGKey(0)
+        grid = init_grid(key, h, w, 5, 0.1)
+        dom = jnp.asarray(dm.RPSLS())
+        nt = (h // th) * (w // tw)
+        for r in range(3):
+            kp, ks, key = jax.random.split(key, 3)
+            props = tile_proposal_batch(kp, nt, 61, (th-2)*(tw-2), 4)
+            shift = round_shift(ks, th, tw)
+            a = run_round(grid, props, shift, (th, tw), 0.3, 0.6, dom)
+            b = sharded_run_round(grid, props, shift, (th, tw), 0.3, 0.6,
+                                  dom, mesh,
+                                  local_kernel={local_kernel!r})
+            assert jnp.array_equal(a, b), f"round {{r}} diverged"
+            grid = a
+        print("EXACT_MATCH")
+    """, n_devices=16)
+    assert "EXACT_MATCH" in out
+
+
+@pytest.mark.slow
+def test_sharded_simulation_runs(subproc):
+    out = subproc("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import dominance as dm, metrics
+        from repro.core.lattice import init_grid
+        from repro.core.params import EscgParams
+        from repro.core.sharded import make_sharded_simulation
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        p = EscgParams(length=64, height=32, species=3, mobility=1e-4,
+                       engine="sublattice", tile=(8, 16), seed=0)
+        grid_sh, one_mcs = make_sharded_simulation(p, dm.RPS(), mesh)
+        key = jax.random.PRNGKey(0)
+        grid = jax.device_put(init_grid(key, 32, 64, 3, 0.1), grid_sh)
+        for i in range(5):
+            key, k = jax.random.split(key)
+            grid = one_mcs(grid, k)
+        c = metrics.counts(grid, 3)
+        assert int(c.sum()) == 32 * 64
+        print("OK", np.asarray(c))
+    """, n_devices=8)
+    assert "OK" in out
+
 
 @pytest.mark.slow
 def test_sharded_shard_count_invariance(subproc):
@@ -161,3 +323,53 @@ def test_halo_roll_matches_global_roll(subproc):
         print("HALO_OK")
     """, n_devices=4)
     assert "HALO_OK" in out
+
+
+@pytest.mark.slow
+def test_vmapped_trials_over_pod_axis(subproc):
+    """IID ESCG trials sharded over a 'pod' axis (the multi-pod statistics
+    story, DESIGN.md §5)."""
+    out = subproc("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import dominance as dm
+        from repro.core.lattice import init_grid
+        from repro.core.params import EscgParams
+        from repro.core.simulation import build_mcs_fn
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((4, 2), ("pod", "data"))
+        p = EscgParams(length=16, height=16, species=3, mobility=1e-4,
+                       engine="batched", seed=0)
+        one = build_mcs_fn(p, jnp.asarray(dm.RPS()))
+        def trial(grid, key):
+            for i in range(3):
+                key, k = jax.random.split(key)
+                grid, _, _ = one(grid, k)
+            return grid
+        keys = jax.random.split(jax.random.PRNGKey(0), 8)
+        grids = jax.vmap(lambda k: init_grid(k, 16, 16, 3, 0.1))(keys)
+        grids = jax.device_put(grids,
+                               NamedSharding(mesh, P("pod", "data", None)))
+        out = jax.jit(jax.vmap(trial))(grids, keys)
+        assert out.shape == (8, 16, 16)
+        print("PODS_OK")
+    """, n_devices=8)
+    assert "PODS_OK" in out
+
+
+@pytest.mark.slow
+def test_composed_mesh_cli_path(subproc):
+    """--trials + --engine sharded_pod --meshShape drives the composed
+    mesh end-to-end through the CLI entry point."""
+    out = subproc("""
+        import sys
+        sys.argv = ["escg_run", "--length", "32", "--height", "32",
+                    "--species", "5", "--mcs", "4", "--chunkMcs", "2",
+                    "--tile", "8", "8", "--trials", "4",
+                    "--engine", "sharded_pod", "--meshShape", "2,2,2",
+                    "--mobility", "0.001"]
+        from repro.launch.escg_run import main
+        main()
+    """, n_devices=8)
+    assert "survival probabilities" in out
