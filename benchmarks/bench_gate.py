@@ -1,0 +1,299 @@
+"""Perf gate — local-kernel x engine-family sweep with a schema-checked
+JSON artifact (DESIGN.md §7).
+
+The paper's headline result (Fig 4.2 / §3.2.1) is that eliminating the
+materialized random-number buffer is the step that turns the update loop
+bandwidth-bound: our ``fused`` local kernel is exactly that move, now
+available inside the sharded engines' shard_map regions. This module is
+the CI-tracked evidence: it sweeps every local kernel {jnp, pallas,
+fused} across every engine family {sublattice, sharded, sharded_pod} and
+writes ``BENCH_kernels.json`` — the artifact the ``perf-smoke`` CI job
+validates and uploads every run, seeding the perf trajectory.
+
+Stdout keeps the common benchmark contract (``name,us_per_call,derived``
+CSV rows, or one JSON object per row under ``BENCH_JSON=1``); the richer
+per-row fields land in the artifact. Both formats are validated by the
+functions below (also exposed as ``--validate FILE...`` for CI):
+
+* a *row* must carry ``name`` (non-empty str), ``us_per_call`` (number
+  > 0) and ``derived`` (str);
+* the *document* must carry ``schema == "escg-bench-kernels/v1"``,
+  ``backend``/``devices``/``smoke`` metadata and a non-empty ``rows``
+  list whose entries extend the row schema with ``family``,
+  ``local_kernel``, ``engine``, ``lattice`` ([H, W]), ``mcs``,
+  ``trials`` and ``updates_per_s`` — and whose rows must cover ALL
+  three local kernels (the acceptance criterion; a sweep that silently
+  drops one fails validation, not review).
+
+Run:  [ESCG_BENCH_SMOKE=1] PYTHONPATH=src python -m benchmarks.bench_gate \
+          [--out BENCH_kernels.json]
+      PYTHONPATH=src python -m benchmarks.bench_gate --validate FILE...
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+# must happen before the first jax import anywhere in the process
+if os.environ.get("ESCG_FAKE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ["ESCG_FAKE_DEVICES"])
+
+SCHEMA = "escg-bench-kernels/v1"
+FAMILIES = ("sublattice", "sharded", "sharded_pod")
+LOCAL_KERNELS = ("jnp", "pallas", "fused")
+# the sublattice family is the single-device engine of each kernel lineage
+SINGLE_ENGINE = {"jnp": "sublattice", "pallas": "pallas",
+                 "fused": "pallas_fused"}
+
+
+# ------------------------------ validation -------------------------------- #
+# Hand-rolled (no jsonschema dependency); returns a list of human-readable
+# errors, empty when valid. CI fails on any non-empty list.
+
+def _check(obj: dict, field: str, types, errors: List[str],
+           ctx: str) -> None:
+    if field not in obj:
+        errors.append(f"{ctx}: missing field {field!r}")
+    elif not isinstance(obj[field], types):
+        errors.append(f"{ctx}: field {field!r} has type "
+                      f"{type(obj[field]).__name__}, want {types}")
+
+
+def validate_row(obj, ctx: str = "row") -> List[str]:
+    """The stdout BENCH_JSON row contract every benchmark module emits."""
+    if not isinstance(obj, dict):
+        return [f"{ctx}: not a JSON object"]
+    errors: List[str] = []
+    _check(obj, "name", str, errors, ctx)
+    _check(obj, "us_per_call", (int, float), errors, ctx)
+    _check(obj, "derived", str, errors, ctx)
+    if not errors:
+        if not obj["name"]:
+            errors.append(f"{ctx}: empty name")
+        if isinstance(obj["us_per_call"], bool) or obj["us_per_call"] <= 0:
+            errors.append(f"{ctx}: us_per_call must be a positive number, "
+                          f"got {obj['us_per_call']!r}")
+    return errors
+
+
+def validate_gate_row(obj, ctx: str = "row") -> List[str]:
+    errors = validate_row(obj, ctx)
+    if not isinstance(obj, dict):
+        return errors
+    _check(obj, "family", str, errors, ctx)
+    _check(obj, "local_kernel", str, errors, ctx)
+    _check(obj, "engine", str, errors, ctx)
+    _check(obj, "lattice", list, errors, ctx)
+    _check(obj, "mcs", int, errors, ctx)
+    _check(obj, "trials", int, errors, ctx)
+    _check(obj, "updates_per_s", (int, float), errors, ctx)
+    if errors:
+        return errors
+    if obj["family"] not in FAMILIES:
+        errors.append(f"{ctx}: family {obj['family']!r} not in {FAMILIES}")
+    if obj["local_kernel"] not in LOCAL_KERNELS:
+        errors.append(f"{ctx}: local_kernel {obj['local_kernel']!r} not in "
+                      f"{LOCAL_KERNELS}")
+    if (len(obj["lattice"]) != 2
+            or not all(isinstance(v, int) and v > 0
+                       for v in obj["lattice"])):
+        errors.append(f"{ctx}: lattice must be [H, W] positive ints, got "
+                      f"{obj['lattice']!r}")
+    if obj["mcs"] < 0 or obj["trials"] < 0:
+        errors.append(f"{ctx}: mcs/trials must be >= 0")
+    if obj["updates_per_s"] < 0:
+        errors.append(f"{ctx}: updates_per_s must be >= 0")
+    return errors
+
+
+def validate_gate_document(doc) -> List[str]:
+    """The BENCH_kernels.json artifact the perf-smoke CI job uploads."""
+    if not isinstance(doc, dict):
+        return ["document: not a JSON object"]
+    errors: List[str] = []
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"document: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    _check(doc, "backend", str, errors, "document")
+    _check(doc, "devices", int, errors, "document")
+    _check(doc, "smoke", bool, errors, "document")
+    _check(doc, "rows", list, errors, "document")
+    if errors:
+        return errors
+    if doc["devices"] < 1:
+        errors.append("document: devices must be >= 1")
+    if not doc["rows"]:
+        errors.append("document: rows is empty")
+    for i, row in enumerate(doc["rows"]):
+        errors.extend(validate_gate_row(row, ctx=f"rows[{i}]"))
+    covered = {r.get("local_kernel") for r in doc["rows"]
+               if isinstance(r, dict)}
+    missing = set(LOCAL_KERNELS) - covered
+    if missing:
+        errors.append(f"document: rows cover local kernels {sorted(covered)}"
+                      f" — missing {sorted(missing)} (all of "
+                      f"{LOCAL_KERNELS} are required)")
+    return errors
+
+
+def validate_file(path: str) -> List[str]:
+    """Validate a BENCH_kernels.json document or a BENCH_JSON row stream
+    (one JSON object per line; blank and '#' lines are ignored)."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        doc = None
+    if isinstance(doc, dict) and "schema" in doc:
+        return [f"{path}: {e}" for e in validate_gate_document(doc)]
+    errors: List[str] = []
+    rows = 0
+    for ln_no, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path}:{ln_no}: not JSON ({e})")
+            continue
+        rows += 1
+        errors.extend(validate_row(obj, ctx=f"{path}:{ln_no}"))
+    if rows == 0:
+        errors.append(f"{path}: no benchmark rows found")
+    return errors
+
+
+# -------------------------------- sweep ----------------------------------- #
+
+def _gate_params(family: str, kernel: str):
+    from repro.core import EscgParams
+    from .common import smoke
+    L = smoke(32, 64)
+    h = smoke(16, 64)
+    if family == "sublattice":
+        engine, lk = SINGLE_ENGINE[kernel], "jnp"   # knob ignored
+    else:
+        engine, lk = family, kernel
+    return EscgParams(length=L, height=h, species=3, mobility=1e-4,
+                      engine=engine, local_kernel=lk, tile=(8, 16), seed=0,
+                      empty=0.1).validate()
+
+
+def _bench_combo(family: str, kernel: str, mcs: int, trials: int) -> dict:
+    """Median time of one jitted chunk (compile excluded, like fig4_3):
+    a simulate() chunk for the one-lattice families, a run_trials chunk
+    for the composed family."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import dominance as dm, engines
+    from repro.core.lattice import init_grid
+    from .common import time_fn
+
+    p = _gate_params(family, kernel)
+    dom = jnp.asarray(dm.RPS(), jnp.float32)
+    built = engines.build(p, dom)
+    if family == "sharded_pod":
+        from repro.core.trials import (build_trial_chunk, pad_trials,
+                                       trial_grids_and_keys)
+        n_pad = pad_trials(trials, built.pod_width)
+        grids, keys = trial_grids_and_keys(
+            p, jax.random.PRNGKey(0), n_pad, sharding=built.key_sharding,
+            grid_sharding=built.batch_sharding)
+        chunk = build_trial_chunk(p, dom, built=built)
+        t = time_fn(lambda: chunk(grids, keys, mcs), warmup=1, iters=2)
+        n_upd = mcs * p.n_cells * n_pad
+        trials = n_pad          # report what actually ran: the padded
+                                # batch is the throughput base, and it
+                                # varies with the pod width across runners
+    else:
+        from repro.core.simulation import build_chunk_fn
+        chunk = build_chunk_fn(p, dom, one_mcs=built.one_mcs)
+        grid = init_grid(jax.random.PRNGKey(0), p.height, p.length,
+                         p.species, p.empty)
+        if built.grid_sharding is not None:
+            grid = jax.device_put(grid, built.grid_sharding)
+        t = time_fn(lambda: chunk(grid, jax.random.PRNGKey(1), mcs),
+                    warmup=1, iters=2)
+        n_upd = mcs * p.n_cells
+        trials = 0
+    upd_s = n_upd / t
+    return {
+        "name": f"kernelgate_{family}_{kernel}",
+        "us_per_call": round(t * 1e6, 1),
+        "derived": f"{upd_s / 1e6:.3f} Mupd/s engine={p.engine}",
+        "family": family,
+        "local_kernel": kernel,
+        "engine": p.engine,
+        "lattice": [p.height, p.length],
+        "mcs": mcs,
+        "trials": trials,
+        "updates_per_s": round(upd_s, 1),
+    }
+
+
+def run(out_path: Optional[str] = None) -> dict:
+    import jax
+
+    from .common import SMOKE, emit, note, smoke
+
+    mcs = smoke(2, 10)
+    trials = smoke(2, 4)
+    note(f"local-kernel gate: {LOCAL_KERNELS} x {FAMILIES}, {mcs} MCS "
+         f"({len(jax.devices())} device(s))")
+    rows = []
+    for family in FAMILIES:
+        for kernel in LOCAL_KERNELS:
+            row = _bench_combo(family, kernel, mcs, trials)
+            rows.append(row)
+            emit(row["name"], row["us_per_call"] / 1e6, row["derived"])
+    doc = {
+        "schema": SCHEMA,
+        "backend": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "smoke": bool(SMOKE),
+        "rows": rows,
+    }
+    errors = validate_gate_document(doc)
+    if errors:                  # the gate gates itself first
+        raise SystemExit("bench_gate produced a schema-invalid document:\n"
+                         + "\n".join(errors))
+    out_path = out_path or os.environ.get("BENCH_GATE_OUT")
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=1)
+        note(f"schema-valid {SCHEMA} document -> {out_path}")
+    return doc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=None,
+                    help="write the BENCH_kernels.json artifact here "
+                         "(default: $BENCH_GATE_OUT, or no file)")
+    ap.add_argument("--validate", nargs="+", metavar="FILE", default=None,
+                    help="validate BENCH_kernels.json documents and/or "
+                         "BENCH_JSON row streams instead of benchmarking")
+    args = ap.parse_args()
+    if args.validate:
+        all_errors = []
+        for path in args.validate:
+            all_errors.extend(validate_file(path))
+        if all_errors:
+            print("\n".join(all_errors), file=sys.stderr)
+            raise SystemExit(1)
+        print(f"# {len(args.validate)} file(s) schema-valid",
+              file=sys.stderr)
+        return
+    run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,16 +5,23 @@ Prints ``name,us_per_call,derived`` CSV rows. Set BENCH_FAST=0 for the full
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
+import traceback
 
 
 def main() -> None:
+    # bench_gate is intentionally absent: it is the perf GATE, not a
+    # figure — the CI perf-smoke job runs it standalone (with --out) and
+    # would otherwise pay its engine-build sweep twice per run
     from . import (fig4_1_prng, fig4_2_batch_sweep, fig4_3_scaling,
                    fig4_4_variance, fig4_9_park_heatmap, roofline_table,
                    table4_2_park_stats, trials_throughput, zhong_density)
     t0 = time.time()
-    print("name,us_per_call,derived")
+    if not os.environ.get("BENCH_JSON"):
+        print("name,us_per_call,derived")   # CSV header; JSON rows need none
+    failures = []
     for mod in (fig4_1_prng, fig4_2_batch_sweep, fig4_3_scaling,
                 fig4_4_variance, zhong_density, fig4_9_park_heatmap,
                 table4_2_park_stats, trials_throughput, roofline_table):
@@ -22,8 +29,16 @@ def main() -> None:
         try:
             mod.run()
         except Exception as e:                          # noqa: BLE001
-            print(f"{mod.__name__},ERROR,{e}", flush=True)
+            # full traceback to stderr; keep stdout well-formed (a bare
+            # ERROR line would corrupt a BENCH_JSON=1 row stream) and fail
+            # the process so CI blames the right step
+            failures.append(mod.__name__)
+            traceback.print_exc(file=sys.stderr)
+            if not os.environ.get("BENCH_JSON"):
+                print(f"{mod.__name__},ERROR,{e}", flush=True)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark module(s) failed: {', '.join(failures)}")
 
 
 if __name__ == "__main__":

@@ -71,14 +71,32 @@ class EngineCaps:
                                # validation of params.mesh_shape and by the
                                # trial runner's composition check.
     local_kernels: Tuple[str, ...] = ()  # values of params.local_kernel the
-                               # engine accepts ('jnp', 'pallas'); empty =
-                               # the knob is ignored
+                               # engine accepts ('jnp', 'pallas', 'fused');
+                               # empty = the knob is ignored
     equiv_oracle: Optional[str] = None  # engine this one is bit-identical
                                # to at the one_mcs level (same key -> same
                                # trajectory); drives the registry-wide
                                # cross-engine equivalence suite
+    equiv_oracles: Tuple[Tuple[str, str], ...] = ()
+                               # per-local-kernel oracle overrides as
+                               # (local_kernel, oracle) pairs: a local
+                               # kernel with its own PRNG scheme belongs to
+                               # a different bit-identity family (e.g.
+                               # 'fused' -> 'pallas_fused'); resolve via
+                               # oracle_for()
     description: str = ""
     paper: str = ""            # paper algorithm / figure it reproduces
+
+    def oracle_for(self, local_kernel: str = "jnp") -> Optional[str]:
+        """The bit-identity oracle engine for this engine running with
+        ``local_kernel`` — ``equiv_oracles`` overrides first, then the
+        kernel-independent ``equiv_oracle`` (DESIGN.md §2). The
+        equivalence suite (tests/test_engine_equivalence.py) enforces one
+        contract per (engine, local kernel) pair through this."""
+        for lk, oracle in self.equiv_oracles:
+            if lk == local_kernel:
+                return oracle
+        return self.equiv_oracle
 
     @property
     def pod_composable(self) -> bool:
@@ -158,8 +176,8 @@ def validate_params(p: "EscgParams") -> None:
         dr, dc = p.shard_grid
         if dr < 1 or dc < 1:
             raise ValueError("shard_grid dims must be >= 1")
-    if p.local_kernel not in ("jnp", "pallas"):
-        raise ValueError("local_kernel must be 'jnp' or 'pallas'")
+    if p.local_kernel not in ("jnp", "pallas", "fused"):
+        raise ValueError("local_kernel must be 'jnp', 'pallas' or 'fused'")
     # engines that declare supported kernels accept exactly those; engines
     # with no declaration ignore the knob (same rule as params.tile)
     if spec.caps.local_kernels and \
@@ -203,6 +221,18 @@ def _tiled_setup(p: "EscgParams"):
     k_per_tile = max(1, math.ceil(p.n_cells / n_tiles))
     interior = (th - 2) * (tw - 2)
     return th, tw, n_tiles, k_per_tile, interior
+
+
+def fused_round_inputs(key: jax.Array, th: int, tw: int):
+    """Per-MCS (Philox seed words, window shift) schedule of the
+    fused-PRNG family: seed = the raw key words, shift keyed by
+    ``fold_in(key, 1)``. THE single definition shared by the
+    ``pallas_fused`` engine and the sharded engines'
+    ``local_kernel='fused'`` path — their bit-identity contract
+    (``EngineCaps.equiv_oracles``) depends on there being exactly one."""
+    seed = jax.random.key_data(key).astype(jnp.uint32)[-2:]
+    shift = round_shift(jax.random.fold_in(key, 1), th, tw)
+    return seed, shift
 
 
 @register("reference", EngineCaps(
@@ -304,8 +334,7 @@ def _build_pallas_fused(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
 
     def one_mcs(grid, key):
         # per-MCS Philox key = the raw PRNG key words; round_idx = 0
-        seed = jax.random.key_data(key).astype(jnp.uint32)[-2:]
-        shift = round_shift(jax.random.fold_in(key, 1), th, tw)
+        seed, shift = fused_round_inputs(key, th, tw)
         grid = kernel_ops.escg_round_fused(
             grid, seed, jnp.uint32(0), shift, dom, p.tile, k_per_tile,
             t_eps, t_eps_mu, p.neighbourhood, roll_back=False)
@@ -317,7 +346,8 @@ def _build_pallas_fused(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
 @register("sharded", EngineCaps(
     flux_only=True, tiled=True, multi_device=True, vmappable=False,
     trial_shardable=False, mesh_axes=("rows", "cols"),
-    local_kernels=("jnp", "pallas"), equiv_oracle="sublattice",
+    local_kernels=("jnp", "pallas", "fused"), equiv_oracle="sublattice",
+    equiv_oracles=(("fused", "pallas_fused"),),
     description="domain-decomposed across devices: shard_map + ppermute "
                 "halo exchange, per-tile Philox streams, psum stasis counts",
     paper="size scaling beyond one device (Fig 4.3, L=3200)"))
@@ -329,7 +359,8 @@ def _build_sharded(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
 @register("sharded_pod", EngineCaps(
     flux_only=True, tiled=True, multi_device=True, vmappable=False,
     trial_shardable=False, mesh_axes=("pod", "rows", "cols"),
-    local_kernels=("jnp", "pallas"), equiv_oracle="sublattice",
+    local_kernels=("jnp", "pallas", "fused"), equiv_oracle="sublattice",
+    equiv_oracles=(("fused", "pallas_fused"),),
     description="composed trial x grid mesh: IID trials sharded over "
                 "'pod', each lattice halo-exchanged over ('rows','cols'); "
                 "same per-tile streams as sharded",

@@ -61,8 +61,10 @@ class EscgParams:
     # the engine's EngineCaps.mesh_axes, not by the drivers.
     mesh_shape: Optional[Tuple[int, int, int]] = None
     # tile sweep implementation inside the sharded engines' shard_map
-    # region: 'jnp' (vmapped lax.scan sweeps) or 'pallas' (the VMEM-tiled
-    # kernels.escg_update path, bit-identical)
+    # region: 'jnp' (vmapped lax.scan sweeps), 'pallas' (the VMEM-tiled
+    # kernels.escg_update path, bit-identical to 'jnp'), or 'fused'
+    # (in-kernel Philox proposal derivation keyed by global tile identity
+    # — zero proposal HBM traffic, bit-identical to engine='pallas_fused')
     local_kernel: str = "jnp"
 
     # ------------------------------------------------------------------ #
@@ -184,9 +186,13 @@ def add_cli_args(p: argparse.ArgumentParser) -> None:
                         "axis, each lattice over (rows, cols); omit to put "
                         "all local devices on the pod axis")
     p.add_argument("--localKernel", dest="local_kernel", type=str,
-                   default="jnp", choices=("jnp", "pallas"),
+                   default="jnp", choices=("jnp", "pallas", "fused"),
                    help="tile-sweep implementation inside the sharded "
-                        "engines' shard_map region (bit-identical paths)")
+                        "engines' shard_map region: jnp and pallas are "
+                        "bit-identical to each other; fused derives "
+                        "proposals in-kernel from Philox counters (zero "
+                        "proposal HBM traffic, bit-identical to "
+                        "--engine pallas_fused)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--chunkMcs", dest="chunk_mcs", type=int, default=100)
     p.add_argument("--outDir", dest="out_dir", type=str, default="escg_out")

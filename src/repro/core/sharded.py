@@ -41,7 +41,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .engines import BuiltEngine, _tiled_setup
+from .engines import BuiltEngine, _tiled_setup, fused_round_inputs
 from .lattice import DIRS
 from .rng import ProposalBatch, round_shift, tile_stream_batch
 from .sublattice import from_tiles, tile_update, to_tiles
@@ -138,21 +138,67 @@ def lattice_sharding(mesh: Mesh, row_axis: str = "rows",
     return NamedSharding(mesh, P(row_axis, col_axis))
 
 
+def round_stream_inputs(p, key: jax.Array, th: int, tw: int):
+    """Per-MCS ``(stream, shift)`` pair consumed by ``make_local_round``,
+    derived from one engine key EXACTLY like the single-device engine of
+    the same local-kernel family (the bit-identity contract,
+    ``EngineCaps.oracle_for``):
+
+    * ``'jnp'`` / ``'pallas'``: ``stream`` is the proposal key of the
+      ``split(key)`` pair, shift keyed by the other half — the
+      ``_build_tiled`` schedule (oracle: ``sublattice``);
+    * ``'fused'``: ``stream`` is the (2,) uint32 Philox seed words and the
+      shift comes from ``fold_in(key, 1)`` — the ``pallas_fused``
+      schedule (``engines.fused_round_inputs``).
+    """
+    if p.local_kernel == "fused":
+        return fused_round_inputs(key, th, tw)
+    kp, ks = jax.random.split(key)
+    return kp, round_shift(ks, th, tw)
+
+
 def make_local_round(p, dom, shard_grid: Tuple[int, int],
                      row_axis: str = "rows", col_axis: str = "cols"):
-    """``local_round(gl, kp, shift)`` — one device-block's share of a
+    """``local_round(gl, stream, shift)`` — one device-block's share of a
     round: halo shift, regenerate the owned tiles' streams, sweep.
+    ``stream`` is the per-MCS proposal source from ``round_stream_inputs``
+    (a PRNG key for the jnp/pallas sweeps, raw Philox seed words for the
+    fused kernel).
 
     This is THE per-block computation both the ``sharded`` and the
     composed ``sharded_pod`` builders run inside their shard_map regions
     (sharded_pod vmaps it over its local trial slice); the cross-engine
     bit-identity contract depends on there being exactly one copy.
+
+    ``local_kernel='fused'`` derives proposals IN-KERNEL from Philox
+    counters keyed by global tile identity (the shard's tile offset +
+    the global tile-grid width fold the counter): zero proposal arrays
+    touch HBM inside the shard_map region, and the trajectory is
+    bit-identical to the single-device ``pallas_fused`` engine for every
+    mesh factorization (DESIGN.md §6).
     """
     t_eps, t_eps_mu = p.action_thresholds()
     th, tw, _, k_per, interior = _tiled_setup(p)
     gw = p.length // tw
     dom_j = jnp.asarray(dom, jnp.float32)
     dr, dc = shard_grid
+
+    if p.local_kernel == "fused":
+        from ..kernels import escg_update_fused, ops as kernel_ops  # lazy
+        interp = kernel_ops._default_interpret(None)
+        dirs = jnp.asarray(DIRS, jnp.int32)
+
+        def local_round(gl, seed, shift):
+            gl = shard_shift2d(gl, shift, (th, tw), (dr, dc), row_axis,
+                               col_axis)
+            lgh, lgw = gl.shape[0] // th, gl.shape[1] // tw
+            off = jnp.stack([lax.axis_index(row_axis) * lgh,
+                             lax.axis_index(col_axis) * lgw])
+            return escg_update_fused.escg_tile_round_fused(
+                gl, seed, jnp.uint32(0), dom_j, dirs, (th, tw), k_per,
+                t_eps, t_eps_mu, p.neighbourhood, interpret=interp,
+                tile_offset=off, grid_tiles_w=gw)
+        return local_round
 
     def local_round(gl, kp, shift):
         gl = shard_shift2d(gl, shift, (th, tw), (dr, dc), row_axis, col_axis)
@@ -197,9 +243,8 @@ def build_engine(params, dom: jax.Array,
                          out_specs=grid_spec, check_rep=False)
 
     def one_mcs(grid, key):
-        kp, ks = jax.random.split(key)
-        shift = round_shift(ks, th, tw)
-        grid = round_fn(grid, kp, shift)
+        stream, shift = round_stream_inputs(p, key, th, tw)
+        grid = round_fn(grid, stream, shift)
         attempts = jnp.int32(n_tiles * k_per)
         return grid, attempts, attempts
 

@@ -27,9 +27,12 @@ bit-identical to the single-device ``sublattice`` engine
 (tests/test_properties.py asserts this for every factorization of 8 fake
 devices).
 
-The in-region tile sweeps honour ``params.local_kernel`` ('jnp' or
-'pallas'), so the composed engine's hot loop can run the same VMEM-tiled
-Pallas path as the single-device ``pallas`` engine.
+The in-region tile sweeps honour ``params.local_kernel``: 'jnp' and
+'pallas' run the same VMEM-tiled paths as the single-device engines
+(oracle: ``sublattice``), and 'fused' derives proposals in-kernel from
+Philox counters keyed by global (tile, trial) identity — zero proposal
+arrays in HBM, bit-identical to the single-device ``pallas_fused`` engine
+for every mesh factorization (oracle family two; DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -42,8 +45,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .engines import BuiltEngine, _tiled_setup
-from .rng import round_shift
-from .sharded import build_engine as build_grid_engine, make_local_round
+from .sharded import (build_engine as build_grid_engine, make_local_round,
+                      round_stream_inputs)
 
 POD_AXIS, ROW_AXIS, COL_AXIS = "pod", "rows", "cols"
 
@@ -94,12 +97,13 @@ def build_engine(params, dom: jax.Array,
         """Advance every trial one MCS. ``grids``: (n, H, W) on
         ``batch_sharding``; ``keys``: (n, 2) per-trial keys on
         ``key_sharding``. Per-trial key usage matches the single-lattice
-        engines exactly (split -> proposals key, shift key), so trial t's
-        trajectory is bit-identical to running it alone."""
-        both = jax.vmap(jax.random.split)(keys)
-        kp, ks = both[:, 0], both[:, 1]
-        shifts = jax.vmap(lambda k: round_shift(k, th, tw))(ks)
-        grids = round_fn(grids, kp, shifts)
+        engine of the same local-kernel family exactly
+        (``sharded.round_stream_inputs``: split -> proposal/shift keys for
+        jnp/pallas, the pallas_fused Philox-seed schedule for 'fused'), so
+        trial t's trajectory is bit-identical to running it alone."""
+        streams, shifts = jax.vmap(
+            lambda k: round_stream_inputs(p, k, th, tw))(keys)
+        grids = round_fn(grids, streams, shifts)
         att = jnp.full((grids.shape[0],), n_tiles * k_per, jnp.int32)
         return grids, att, att
 

@@ -26,6 +26,12 @@ Design invariants (tested in tests/test_trials.py):
   host only ever sees per-chunk per-MCS alive-species masks — never the
   grids — and streams stasis / extinction statistics between chunks instead
   of materializing one monolithic ``(trials, mcs, ...)`` history.
+* **Async stat streaming.** By default (``async_stats=True``) the driver
+  keeps one chunk in flight ahead of the host: chunk k+1 is dispatched
+  before chunk k's masks are pulled to the host, so stasis/extinction
+  accounting overlaps device compute (double-buffered device-to-host
+  copies; JAX dispatch is asynchronous). Bit-identical to the synchronous
+  schedule — the speculative chunk past an early-exit is dropped unread.
 * **Chunked stasis early-exit.** Per-trial stasis (<= 1 species alive,
   paper §3.2.2) is recorded at exact per-MCS resolution from the streamed
   masks, but the driver only *stops* at chunk granularity, and only once
@@ -267,6 +273,7 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
                chunk_mcs: Optional[int] = None,
                stop_on_stasis: bool = True,
                hooks: Sequence[Callable[[int, np.ndarray], None]] = (),
+               async_stats: bool = True,
                ) -> TrialResult:
     """Run ``n_trials`` IID simulations, vmapped and device-sharded.
 
@@ -290,6 +297,16 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
     ``hooks`` fire after every chunk with ``(mcs_done, alive_counts)``
     where ``alive_counts`` is the (n_trials,) number of species alive per
     trial at the chunk boundary.
+
+    ``async_stats`` (default True) streams the per-chunk statistics OFF
+    the critical path: chunk k+1 is dispatched (JAX dispatch is
+    asynchronous) *before* the host touches chunk k's alive-masks, so the
+    stasis/extinction accounting overlaps the next chunk's device compute
+    instead of serializing on it (double-buffered device-to-host copies).
+    Results are bit-identical either way — the host consumes exactly the
+    same arrays in the same order; the one speculative chunk in flight
+    past a stasis early-exit is discarded unconsumed, so ``mcs_completed``
+    and every statistic match the synchronous schedule exactly.
 
     Bit-identical for any ``trial_devices`` and any padding: per-trial
     PRNG keys are ``fold_in(key, trial_index)``.
@@ -362,9 +379,19 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
     kept_tot = att_tot = 0
     done = 0
 
-    while done < n_mcs:
-        m = min(chunk_len, n_mcs - done)
-        grids, keys, cnts, alive, kept, att = chunk_fn(grids, keys, m)
+    # One chunk is kept in flight ahead of the host (async_stats): the
+    # np.asarray() below blocks on the chunk being *consumed* while the
+    # speculatively dispatched successor already computes. On a stasis
+    # early-exit the in-flight chunk is simply dropped — its outputs are
+    # never read, so statistics and mcs_completed are schedule-independent.
+    m = min(chunk_len, n_mcs)
+    out = chunk_fn(grids, keys, m) if n_mcs else None
+    while out is not None:
+        grids, keys, cnts, alive, kept, att = out
+        m_next = min(chunk_len, n_mcs - done - m)
+        out = (chunk_fn(grids, keys, m_next)
+               if m_next and async_stats else None)
+
         alive_h = np.asarray(alive)                  # (n_pad, m, S) bool
         final_cnts = np.asarray(cnts)
         kept_tot += int(np.asarray(kept)[:n_trials].sum())
@@ -381,6 +408,9 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
             hook(done, surv[:n_trials].sum(axis=1))
         if stop_on_stasis and (stasis[:n_trials] >= 0).all():
             break
+        if m_next and out is None:                   # async_stats=False
+            out = chunk_fn(grids, keys, m_next)
+        m = m_next
 
     return TrialResult(
         survival=surv[:n_trials].astype(bool),

@@ -7,10 +7,20 @@ the tuning knob: each tile derives its proposals from Philox-4x32 counters
 elementary update of HBM traffic (4 random words) drop to zero; what
 remains is the grid itself.
 
-Counter layout: c0 = tile_id * K + j (proposal index), c1 = round index,
-c2 = c3 = 0; key = two words derived from the simulation PRNG key per MCS.
-Uniform ints via modulus (the paper's own technique, §3.2.1 — the bias at
-32 bits is < 2^-22 for any lattice tile).
+Counter layout (``kernels.philox.philox_proposal_fields``): c0 = global
+tile_id * K + j (proposal index), c1 = round index, c2 = c3 = 0; key = two
+words derived from the simulation PRNG key per MCS. Uniform ints via
+modulus (the paper's own technique, §3.2.1 — the bias at 32 bits is
+< 2^-22 for any lattice tile).
+
+**Global tile identity.** ``tile_offset``/``grid_tiles_w`` let a shard of
+a domain-decomposed lattice derive the SAME counters the single-device
+kernel would: the program's (i, j) position is offset by the shard's
+first owned tile and raster-flattened against the GLOBAL tile-grid width.
+That is the whole multi-device contract — the sharded engines'
+``local_kernel='fused'`` path stays bit-identical to ``pallas_fused`` for
+every mesh factorization while no proposal array ever touches HBM
+(DESIGN.md §6).
 
 Oracle: host-side Philox (kernels.ref.philox4x32_ref) feeding the standard
 tile oracle — bit-exact match required (tests/test_kernels.py).
@@ -18,33 +28,30 @@ tile oracle — bit-exact match required (tests/test_kernels.py).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from .philox import philox_rounds
+from .philox import philox_proposal_fields
 
 
-def _kernel(seed_ref, round_ref, dom_ref, dirs_ref, grid_ref, out_ref, *,
-            t_eps: float, t_eps_mu: float, k: int, iw: int, interior: int,
-            nbhd: int, gw: int):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    tile_id = (i * gw + j).astype(jnp.uint32)
+def _kernel(seed_ref, round_ref, off_ref, dom_ref, dirs_ref, grid_ref,
+            out_ref, *, t_eps: float, t_eps_mu: float, k: int, iw: int,
+            interior: int, nbhd: int, gw: int):
+    i = pl.program_id(0).astype(jnp.uint32)
+    j = pl.program_id(1).astype(jnp.uint32)
+    # global raster tile id: program position offset by this shard's first
+    # owned tile, flattened against the GLOBAL tile-grid width
+    tile_id = (off_ref[0, 0] + i) * jnp.uint32(gw) + (off_ref[0, 1] + j)
 
     # --- derive this tile's K proposals from counters (vectorized) ---
     idx = tile_id * jnp.uint32(k) + lax.iota(jnp.uint32, k)
-    c1 = jnp.full((k,), round_ref[0, 0], jnp.uint32)
-    zeros = jnp.zeros((k,), jnp.uint32)
-    x0, x1, x2, x3 = philox_rounds(idx, c1, zeros, zeros,
-                                   seed_ref[0, 0], seed_ref[0, 1])
-    cells = (x0 % jnp.uint32(interior)).astype(jnp.int32)
-    dirns = (x1 % jnp.uint32(nbhd)).astype(jnp.int32)
-    uact = (x2 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
-    udom = (x3 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
+    cells, dirns, uact, udom = philox_proposal_fields(
+        idx, round_ref[0, 0], seed_ref[0, 0], seed_ref[0, 1], interior,
+        nbhd)
 
     out_ref[...] = grid_ref[...]
 
@@ -100,10 +107,18 @@ def escg_tile_round_fused(grid: jax.Array, seed: jax.Array,
                           dirs: jax.Array, tile_shape: Tuple[int, int],
                           k_per_tile: int, t_eps: float, t_eps_mu: float,
                           neighbourhood: int = 4,
-                          interpret: bool = False) -> jax.Array:
+                          interpret: bool = False,
+                          tile_offset: Optional[jax.Array] = None,
+                          grid_tiles_w: Optional[int] = None) -> jax.Array:
     """One fused round over an already-shifted (H, W) grid.
 
     seed: (2,) uint32 key words; round_idx: scalar uint32.
+
+    ``grid`` may be a SHARD of a larger lattice: ``tile_offset`` is this
+    shard's (row, col) position in global tile units and ``grid_tiles_w``
+    the global tile-grid width, so in-kernel counters stay keyed by global
+    tile identity (defaults — zero offset, local width — recover the
+    single-device kernel exactly).
     """
     h, w = grid.shape
     th, tw = tile_shape
@@ -114,17 +129,22 @@ def escg_tile_round_fused(grid: jax.Array, seed: jax.Array,
     kern = functools.partial(
         _kernel, t_eps=float(t_eps), t_eps_mu=float(t_eps_mu),
         k=int(k_per_tile), iw=int(iw), interior=int(interior),
-        nbhd=int(neighbourhood), gw=int(gw))
+        nbhd=int(neighbourhood),
+        gw=int(gw if grid_tiles_w is None else grid_tiles_w))
     seed_arr = seed.reshape(1, 2).astype(jnp.uint32)
     round_arr = jnp.reshape(round_idx, (1, 1)).astype(jnp.uint32)
+    if tile_offset is None:
+        tile_offset = jnp.zeros((2,), jnp.uint32)
+    off_arr = jnp.reshape(tile_offset, (1, 2)).astype(jnp.uint32)
     full = lambda a: pl.BlockSpec(a.shape, lambda i, j: (0,) * a.ndim)
 
     return pl.pallas_call(
         kern,
         grid=(gh, gw),
-        in_specs=[full(seed_arr), full(round_arr), full(dom), full(dirs),
+        in_specs=[full(seed_arr), full(round_arr), full(off_arr),
+                  full(dom), full(dirs),
                   pl.BlockSpec((th, tw), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((th, tw), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((h, w), grid.dtype),
         interpret=interpret,
-    )(seed_arr, round_arr, dom, dirs, grid)
+    )(seed_arr, round_arr, off_arr, dom, dirs, grid)

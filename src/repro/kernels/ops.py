@@ -74,16 +74,18 @@ def density_counts(grid: jax.Array, species: int,
 @functools.partial(jax.jit, static_argnames=("tile_shape", "k_per_tile",
                                              "t_eps", "t_eps_mu",
                                              "neighbourhood", "interpret",
-                                             "roll_back"))
-def _escg_round_fused_impl(grid, seed, round_idx, shift, dom, tile_shape,
-                           k_per_tile, t_eps, t_eps_mu, neighbourhood,
-                           interpret, roll_back):
+                                             "roll_back", "grid_tiles_w"))
+def _escg_round_fused_impl(grid, seed, round_idx, shift, tile_offset, dom,
+                           tile_shape, k_per_tile, t_eps, t_eps_mu,
+                           neighbourhood, interpret, roll_back,
+                           grid_tiles_w):
     dirs = jnp.asarray(DIRS, jnp.int32)
     g = jnp.roll(grid, (-shift[0], -shift[1]), (0, 1))
     g = escg_fused_kernel.escg_tile_round_fused(
         g, seed, round_idx, jnp.asarray(dom, jnp.float32), dirs,
         tile_shape, k_per_tile, t_eps, t_eps_mu, neighbourhood,
-        interpret=interpret)
+        interpret=interpret, tile_offset=tile_offset,
+        grid_tiles_w=grid_tiles_w)
     if roll_back:
         g = jnp.roll(g, (shift[0], shift[1]), (0, 1))
     return g
@@ -91,10 +93,16 @@ def _escg_round_fused_impl(grid, seed, round_idx, shift, dom, tile_shape,
 
 def escg_round_fused(grid, seed, round_idx, shift, dom, tile_shape,
                      k_per_tile, t_eps, t_eps_mu, neighbourhood=4,
-                     interpret=None, roll_back=True):
+                     interpret=None, roll_back=True, tile_offset=None,
+                     grid_tiles_w=None):
     """Fused-PRNG sublattice round: proposals derived in-kernel from Philox
-    counters (zero proposal HBM traffic; see escg_update_fused)."""
-    return _escg_round_fused_impl(grid, seed, round_idx, shift, dom,
-                                  tile_shape, k_per_tile, float(t_eps),
+    counters (zero proposal HBM traffic; see escg_update_fused).
+    ``tile_offset``/``grid_tiles_w`` key the counters by GLOBAL tile
+    identity when ``grid`` is one shard of a larger lattice."""
+    if tile_offset is None:
+        tile_offset = jnp.zeros((2,), jnp.uint32)
+    return _escg_round_fused_impl(grid, seed, round_idx, shift, tile_offset,
+                                  dom, tile_shape, k_per_tile, float(t_eps),
                                   float(t_eps_mu), neighbourhood,
-                                  _default_interpret(interpret), roll_back)
+                                  _default_interpret(interpret), roll_back,
+                                  grid_tiles_w)

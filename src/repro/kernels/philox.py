@@ -56,6 +56,31 @@ def philox_rounds(c0, c1, c2, c3, k0, k1):
     return c0, c1, c2, c3
 
 
+def philox_proposal_fields(idx, round_idx, k0, k1, interior: int,
+                           nbhd: int):
+    """Map Philox counters to one ESCG proposal each (the fused-kernel
+    counter layout, DESIGN.md §3): counter = (idx, round_idx, 0, 0) with
+    ``idx`` the GLOBAL proposal index (global tile id * K + j), key =
+    ``(k0, k1)``. The four output words become (cell, dirn, u_act, u_dom);
+    uniform ints via modulus (paper §3.2.1 — bias < 2^-22 at 32 bits),
+    uniform floats from the top 24 bits (exact in f32, half-open [0, 1)).
+
+    Keying by global identity only — never by shard layout — is what lets
+    every device of the sharded engines regenerate exactly the streams of
+    the (tile, proposal) pairs it owns, bit-identical to the single-device
+    ``pallas_fused`` engine. Host oracle: ``ref.fused_proposals_ref``.
+    """
+    idx = idx.astype(jnp.uint32)
+    c1 = jnp.full(idx.shape, round_idx, jnp.uint32)
+    zeros = jnp.zeros(idx.shape, jnp.uint32)
+    x0, x1, x2, x3 = philox_rounds(idx, c1, zeros, zeros, k0, k1)
+    cell = (x0 % jnp.uint32(interior)).astype(jnp.int32)
+    dirn = (x1 % jnp.uint32(nbhd)).astype(jnp.int32)
+    u_act = (x2 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
+    u_dom = (x3 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
+    return cell, dirn, u_act, u_dom
+
+
 def _kernel(seed_ref, out_ref, *, block: int, base_stream: int):
     i = pl.program_id(0)
     k0 = seed_ref[0, 0]

@@ -8,9 +8,12 @@ periodic snapshots and density export.
 Beyond the paper's CLI it exposes the two scaling axes and their
 composition (DESIGN.md §4-§6):
 
-* ``--engine sharded [--shardGrid R C] [--localKernel pallas]`` — one big
-  lattice decomposed across devices (grid axis); ``--localKernel``
-  selects the in-region tile sweep implementation (bit-identical paths).
+* ``--engine sharded [--shardGrid R C] [--localKernel pallas|fused]`` —
+  one big lattice decomposed across devices (grid axis); ``--localKernel``
+  selects the in-region tile sweep implementation: ``jnp``/``pallas`` are
+  bit-identical to each other, ``fused`` derives proposals in-kernel from
+  Philox counters keyed by global tile identity (zero proposal HBM
+  traffic, bit-identical to ``--engine pallas_fused``).
 * ``--trials N [--trialDevices D]`` — N IID replicate lattices, vmapped
   and sharded across devices over the trial axis (pod axis). Prints
   streamed survival / stasis statistics; with ``--save true`` the full
@@ -32,6 +35,9 @@ Examples:
   python -m repro.launch.escg_run --length 800 --height 800 --species 8 \
       --trials 16 --mcs 10000 --engine sharded_pod --meshShape 4,2,2 \
       --tile 8 32                 # massed replication of LARGE lattices
+  python -m repro.launch.escg_run --length 800 --height 800 --species 8 \
+      --trials 16 --mcs 10000 --engine sharded_pod --meshShape 4,2,2 \
+      --tile 8 32 --localKernel fused   # same, zero proposal HBM traffic
   python -m repro.launch.escg_run --listEngines --markdown   # engine matrix
 """
 from __future__ import annotations
@@ -55,7 +61,7 @@ from ..core.trials import run_trials
 # ------------------------- engine matrix (docs) --------------------------- #
 
 _MATRIX_HEAD = ("engine", "boundaries", "tile", "devices", "trial axis",
-                "reproduces")
+                "local kernels", "reproduces")
 _MATRIX_BEGIN = ("<!-- engine-matrix:begin (generated: escg_run "
                  "--listEngines --markdown; CI-checked) -->")
 _MATRIX_END = "<!-- engine-matrix:end -->"
@@ -73,6 +79,7 @@ def engine_matrix_rows():
                      tile,
                      "multi" if c.multi_device else "single",
                      c.trial_axis,
+                     ", ".join(f"`{k}`" for k in c.local_kernels) or "—",
                      f"{c.paper} — {c.description}"))
     return rows
 

@@ -11,6 +11,25 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# Suites the CI `composed` job (8 fake devices, `-m composed`) must cover:
+# marker-driven selection replaced a hardcoded file list that silently
+# missed newly added modules, so guard the floor here — a refactor that
+# drops the marker from one of these files fails collection everywhere.
+COMPOSED_REQUIRED = {"test_engine_equivalence.py", "test_trials.py",
+                     "test_golden.py"}
+
+
+def pytest_collection_modifyitems(config, items):
+    unmarked = sorted({
+        os.path.basename(str(item.fspath)) for item in items
+        if os.path.basename(str(item.fspath)) in COMPOSED_REQUIRED
+        and item.get_closest_marker("composed") is None})
+    if unmarked:
+        raise pytest.UsageError(
+            f"suites {unmarked} must carry the 'composed' marker "
+            "(pytestmark = pytest.mark.composed) — the CI composed-mesh "
+            "job selects tests with -m composed")
+
 
 def run_with_devices(code: str, n_devices: int, timeout: int = 420) -> str:
     """Run python `code` in a subprocess with N fake CPU devices."""

@@ -1,14 +1,17 @@
 """Registry-driven cross-engine equivalence suite (DESIGN.md §2/§6).
 
-Every test in this module parametrizes over ``engines.engine_names()`` —
-new engines are covered the moment they register, with zero test edits:
+Every test in this module parametrizes over the registry's
+``(engine, local_kernel)`` pairs — new engines AND new local kernels are
+covered the moment they register, with zero test edits:
 
 * every engine must run through ``simulate`` deterministically and
   conserve cell counts;
-* engines declaring ``EngineCaps.equiv_oracle`` must be bit-identical to
-  that oracle at the one-MCS level (grids, kept, attempts) — this is how
-  ``pallas``/``sharded``/``sharded_pod`` inherit the ``sublattice``
-  trajectory guarantee;
+* every pair declaring an oracle (``EngineCaps.oracle_for``) must be
+  bit-identical to it at the one-MCS level (grids, kept, attempts) — this
+  is how ``pallas``/``sharded``/``sharded_pod`` inherit the ``sublattice``
+  trajectory guarantee, and how the sharded engines'
+  ``local_kernel='fused'`` path inherits the SECOND oracle family,
+  ``pallas_fused`` (in-kernel Philox counters, ``equiv_oracles``);
 * engines the trial driver accepts (vmappable or pod-composable) must
   produce bit-identical ``run_trials`` statistics to their oracle's
   vmapped path.
@@ -20,6 +23,8 @@ composed-mesh job) the same assertions exercise real multi-device
 placement — bit-identity for ANY layout is exactly the invariant under
 test.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,6 +33,8 @@ import pytest
 from repro.core import EscgParams, dominance as dm, engines, simulate
 from repro.core.lattice import init_grid
 from repro.core.trials import run_trials
+
+pytestmark = pytest.mark.composed   # re-run by the CI 8-fake-device job
 
 H, W, TILE, SPECIES, N_MCS = 16, 32, (8, 16), 5, 3
 
@@ -40,8 +47,31 @@ def _params(name: str, **overrides) -> EscgParams:
     return EscgParams(**kw).validate()
 
 
+def _engine_kernel_pairs():
+    """Every (engine, local_kernel) combination the registry admits —
+    engines that ignore the knob contribute one 'jnp' row."""
+    return [(spec.name, lk)
+            for spec in engines.engine_specs()
+            for lk in (spec.caps.local_kernels or ("jnp",))]
+
+
 def _dom():
     return dm.circulant(SPECIES, (1, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def _oracle_trajectory(name: str):
+    """Oracle-side trajectory, cached per engine name — several
+    (engine, local_kernel) pairs answer to the same oracle (sublattice,
+    pallas_fused) and need not recompute it."""
+    return _mcs_trajectory(_params(name))
+
+
+@functools.lru_cache(maxsize=None)
+def _oracle_trials(name: str):
+    """Oracle-side run_trials statistics, cached per engine name."""
+    return run_trials(_params(name), _dom(), n_trials=3, n_mcs=N_MCS,
+                      stop_on_stasis=False)
 
 
 def _mcs_trajectory(p: EscgParams, n_mcs: int = N_MCS):
@@ -76,37 +106,38 @@ def test_engine_is_deterministic_and_conserves_cells(name):
     assert r1.mcs_completed == N_MCS
 
 
-@pytest.mark.parametrize("name", engines.engine_names())
-def test_engine_matches_declared_oracle(name):
-    """caps.equiv_oracle is a bit-identity CONTRACT: same key, same
-    grids/kept/attempts every MCS. Engines without an oracle (the oracles
-    themselves, and engines with their own PRNG schemes like pallas_fused)
-    skip."""
-    oracle = engines.get_engine(name).caps.equiv_oracle
+@pytest.mark.parametrize("name,local_kernel", _engine_kernel_pairs())
+def test_engine_matches_declared_oracle(name, local_kernel):
+    """caps.oracle_for(local_kernel) is a bit-identity CONTRACT: same key,
+    same grids/kept/attempts every MCS. The jnp/pallas kernels answer to
+    ``sublattice``; the fused kernel answers to ``pallas_fused`` (its own
+    PRNG family, ``equiv_oracles``). Pairs without an oracle (the oracles
+    themselves) skip."""
+    oracle = engines.get_engine(name).caps.oracle_for(local_kernel)
     if oracle is None:
         pytest.skip(f"engine {name!r} declares no equivalence oracle")
-    g_a, k_a, t_a = _mcs_trajectory(_params(name))
-    g_b, k_b, t_b = _mcs_trajectory(_params(oracle))
+    g_a, k_a, t_a = _mcs_trajectory(_params(name, local_kernel=local_kernel))
+    g_b, k_b, t_b = _oracle_trajectory(oracle)
     assert k_a == k_b and t_a == t_b
     for i, (ga, gb) in enumerate(zip(g_a, g_b)):
         np.testing.assert_array_equal(ga, gb, err_msg=f"MCS {i + 1}")
 
 
-@pytest.mark.parametrize("name", engines.engine_names())
-def test_trial_driver_matches_oracle(name):
+@pytest.mark.parametrize("name,local_kernel", _engine_kernel_pairs())
+def test_trial_driver_matches_oracle(name, local_kernel):
     """run_trials statistics are bit-identical to the oracle engine's
     trial batch — covers the vmapped path (e.g. pallas) AND the composed
-    pod x grid path (sharded_pod) with one assertion."""
+    pod x grid path (sharded_pod, every local kernel) with one
+    assertion."""
     spec = engines.get_engine(name)
     if not (spec.caps.vmappable or spec.caps.pod_composable):
         pytest.skip(f"engine {name!r} cannot run trial batches")
-    if spec.caps.equiv_oracle is None:
+    oracle = spec.caps.oracle_for(local_kernel)
+    if oracle is None:
         pytest.skip(f"engine {name!r} declares no equivalence oracle")
-    dom = _dom()
-    r = run_trials(_params(name), dom, n_trials=3, n_mcs=N_MCS,
-                   stop_on_stasis=False)
-    ro = run_trials(_params(spec.caps.equiv_oracle), dom, n_trials=3,
-                    n_mcs=N_MCS, stop_on_stasis=False)
+    r = run_trials(_params(name, local_kernel=local_kernel), _dom(),
+                   n_trials=3, n_mcs=N_MCS, stop_on_stasis=False)
+    ro = _oracle_trials(oracle)
     np.testing.assert_array_equal(r.survival, ro.survival)
     np.testing.assert_array_equal(r.densities, ro.densities)
     np.testing.assert_array_equal(r.stasis_mcs, ro.stasis_mcs)
@@ -114,10 +145,20 @@ def test_trial_driver_matches_oracle(name):
 
 
 def test_every_oracle_is_registered():
-    """equiv_oracle names must resolve — a typo would silently skip the
-    equivalence tests above."""
+    """Every oracle name — kernel-independent equiv_oracle AND the
+    per-local-kernel equiv_oracles overrides — must resolve; a typo would
+    silently skip the equivalence tests above. Override keys must be
+    local kernels the engine actually accepts."""
     for spec in engines.engine_specs():
-        if spec.caps.equiv_oracle is not None:
-            assert spec.caps.equiv_oracle in engines.engine_names(), \
-                f"{spec.name} declares unknown oracle {spec.caps.equiv_oracle}"
-            assert spec.caps.equiv_oracle != spec.name
+        oracles = [spec.caps.equiv_oracle] + [o for _, o in
+                                              spec.caps.equiv_oracles]
+        for oracle in oracles:
+            if oracle is None:
+                continue
+            assert oracle in engines.engine_names(), \
+                f"{spec.name} declares unknown oracle {oracle}"
+            assert oracle != spec.name
+        for lk, _ in spec.caps.equiv_oracles:
+            assert lk in spec.caps.local_kernels, \
+                (f"{spec.name} maps oracle for local kernel {lk!r} it "
+                 f"does not accept ({spec.caps.local_kernels})")

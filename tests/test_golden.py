@@ -5,10 +5,13 @@ The bit-identity guarantees in this repo (DESIGN.md §3) are all *relative*
 EVERY engine's PRNG consumption or update order in lockstep (e.g. an extra
 key split in the driver, a reordered proposal field) would sail through
 those tests. The goldens pin the *absolute* trajectories: a tiny
-``reference``-engine run (per-MCS grid hashes + densities) and a
-``sublattice``-family ``TrialResult``, checked in as JSON. Any drift in
-PRNG streams, update order, or the streamed statistics pipeline fails
-here, even on single-device CI.
+``reference``-engine run (per-MCS grid hashes + densities), a
+``sublattice``-family ``TrialResult``, and a ``pallas_fused`` run (the
+second oracle family — its in-kernel Philox counter layout anchors every
+``local_kernel='fused'`` path; a lockstep change to the counter mapping
+would pass the relative fused-vs-sharded tests and fail only here), all
+checked in as JSON. Any drift in PRNG streams, update order, or the
+streamed statistics pipeline fails here, even on single-device CI.
 
 Regenerate (ONLY when a change intentionally redefines trajectories):
 
@@ -19,14 +22,18 @@ import json
 import os
 
 import numpy as np
+import pytest
 
 from repro.core import EscgParams, dominance as dm, simulate
 from repro.core.trials import run_trials
+
+pytestmark = pytest.mark.composed   # re-run by the CI 8-fake-device job
 
 GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                           "golden")
 TRAJ_PATH = os.path.join(GOLDEN_DIR, "reference_trajectory.json")
 TRIALS_PATH = os.path.join(GOLDEN_DIR, "trial_result.json")
+FUSED_PATH = os.path.join(GOLDEN_DIR, "fused_trajectory.json")
 
 # frozen configs — changing these invalidates the fixtures, regenerate
 TRAJ_PARAMS = EscgParams(length=12, height=12, species=3, mcs=5,
@@ -36,6 +43,9 @@ TRIAL_PARAMS = EscgParams(length=16, height=16, species=5, mobility=1e-3,
                           engine="sublattice", tile=(8, 8), empty=0.1,
                           seed=7)
 TRIAL_N, TRIAL_MCS, TRIAL_CHUNK = 4, 6, 3
+FUSED_PARAMS = EscgParams(length=16, height=16, species=5, mcs=5,
+                          chunk_mcs=1, engine="pallas_fused", tile=(8, 8),
+                          mobility=1e-3, empty=0.1, seed=11)
 
 
 def _grid_hash(grid: np.ndarray) -> str:
@@ -44,14 +54,16 @@ def _grid_hash(grid: np.ndarray) -> str:
         np.ascontiguousarray(grid.astype("<i4")).tobytes()).hexdigest()
 
 
-def _run_trajectory():
+def _capture_trajectory(params, dom):
+    """Frozen-trajectory record for one (params, dominance) config:
+    per-MCS grid hashes via hooks, densities/final grid from the same
+    run (simulate is deterministic; one execution serves both)."""
     hashes = []
-    simulate(TRAJ_PARAMS, dm.RPS(), stop_on_stasis=False,
-             hooks=[lambda mcs, grid, cnts:
-                    hashes.append(_grid_hash(np.asarray(grid)))])
-    res = simulate(TRAJ_PARAMS, dm.RPS(), stop_on_stasis=False)
+    res = simulate(params, dom, stop_on_stasis=False,
+                   hooks=[lambda mcs, grid, cnts:
+                          hashes.append(_grid_hash(np.asarray(grid)))])
     return {
-        "params": json.loads(TRAJ_PARAMS.to_json()),
+        "params": json.loads(params.to_json()),
         "grid_hashes": hashes,                       # one per MCS
         "densities": np.asarray(res.densities).tolist(),  # row 0 = init
         "final_hash": _grid_hash(res.grid),
@@ -59,9 +71,17 @@ def _run_trajectory():
     }
 
 
+def _run_trajectory():
+    return _capture_trajectory(TRAJ_PARAMS, dm.RPS())
+
+
 def _run_trials_golden() -> str:
     return run_trials(TRIAL_PARAMS, dm.RPSLS(), TRIAL_N, n_mcs=TRIAL_MCS,
                       chunk_mcs=TRIAL_CHUNK, stop_on_stasis=False).to_json()
+
+
+def _run_fused_trajectory():
+    return _capture_trajectory(FUSED_PARAMS, dm.RPSLS())
 
 
 def test_reference_trajectory_matches_golden():
@@ -91,9 +111,28 @@ def test_trial_result_matches_golden():
         "intentional")
 
 
+def test_fused_trajectory_matches_golden():
+    """Absolute anchor of the fused-Philox family: the in-kernel counter
+    layout (global tile id * K + j, round index, seed words) must not
+    drift — every sharded ``local_kernel='fused'`` path inherits this
+    trajectory through the ``pallas_fused`` oracle."""
+    with open(FUSED_PATH) as f:
+        want = json.load(f)
+    got = _run_fused_trajectory()
+    assert got["grid_hashes"] == want["grid_hashes"], (
+        "pallas_fused trajectory drifted from tests/golden/ — the fused "
+        "Philox counter layout or update order changed; regenerate only "
+        "if intentional")
+    assert got["final_hash"] == want["final_hash"]
+    np.testing.assert_array_equal(np.asarray(got["densities"]),
+                                  np.asarray(want["densities"]))
+    assert got["kept_fraction"] == want["kept_fraction"]
+    assert got["params"] == want["params"]
+
+
 def test_goldens_are_checked_in():
     """The fixtures must live in git, not be produced on the fly."""
-    for path in (TRAJ_PATH, TRIALS_PATH):
+    for path in (TRAJ_PATH, TRIALS_PATH, FUSED_PATH):
         assert os.path.exists(path), (
             f"{path} missing — run: PYTHONPATH=src python "
             "tests/test_golden.py --regen")
@@ -105,7 +144,9 @@ def _regen():
         json.dump(_run_trajectory(), f, indent=1)
     with open(TRIALS_PATH, "w") as f:
         f.write(_run_trials_golden())
-    print(f"regenerated {TRAJ_PATH} and {TRIALS_PATH}")
+    with open(FUSED_PATH, "w") as f:
+        json.dump(_run_fused_trajectory(), f, indent=1)
+    print(f"regenerated {TRAJ_PATH}, {TRIALS_PATH} and {FUSED_PATH}")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,8 @@ except ImportError:   # hermetic container: deterministic fallback sampler
 
 from repro.core.sharded import halo_roll
 
+pytestmark = pytest.mark.composed   # re-run by the CI 8-fake-device job
+
 
 # ------------------------- fast host-level layer -------------------------- #
 
@@ -138,6 +140,52 @@ def test_mesh_factorization_invariance(subproc):
         print("FACTORIZATION_INVARIANT")
     """, n_devices=8)
     assert "FACTORIZATION_INVARIANT" in out
+
+
+@pytest.mark.slow
+def test_fused_local_kernel_factorization_invariance(subproc):
+    """Acceptance property for the fused-Philox family: run_trials with
+    ``engine='sharded_pod', local_kernel='fused'`` on ANY random legal
+    (P, R, C) factorization of 8 fake devices is bit-identical to the
+    (1, 1, 1) layout AND to the single-device ``pallas_fused`` engine's
+    pod-sharded trial batch — in-kernel counters are keyed by global
+    (trial, tile) identity only, never by the mesh layout."""
+    out = subproc("""
+        import random
+        import numpy as np
+        from repro.core import EscgParams, dominance as dm
+        from repro.core.trials import run_trials
+
+        kw = dict(length=32, height=32, species=5, mobility=1e-3,
+                  tile=(8, 8), empty=0.1, seed=17)
+        dom = dm.RPSLS()
+
+        def run(engine, ms=None, lk='jnp'):
+            return run_trials(EscgParams(engine=engine, mesh_shape=ms,
+                                         local_kernel=lk, **kw), dom,
+                              n_trials=5, n_mcs=4, chunk_mcs=2,
+                              stop_on_stasis=False)
+
+        oracle = run('pallas_fused')            # vmapped, pod-sharded
+        base = run('sharded_pod', (1, 1, 1), 'fused')
+        for f in ('survival', 'densities', 'stasis_mcs', 'extinction_mcs'):
+            assert np.array_equal(getattr(base, f), getattr(oracle, f)), f
+
+        legal = [(p, r, c)
+                 for p in (1, 2, 4, 8) for r in (1, 2, 4) for c in (1, 2, 4)
+                 if p * r * c == 8]
+        rng = random.Random("fused_factorization")
+        for ms in rng.sample(legal, 5):
+            r = run('sharded_pod', ms, 'fused')
+            assert r.n_devices == 8, ms
+            assert np.array_equal(r.survival, oracle.survival), ms
+            assert np.array_equal(r.densities, oracle.densities), ms
+            assert np.array_equal(r.stasis_mcs, oracle.stasis_mcs), ms
+            assert np.array_equal(r.extinction_mcs,
+                                  oracle.extinction_mcs), ms
+        print("FUSED_FACTORIZATION_INVARIANT")
+    """, n_devices=8)
+    assert "FUSED_FACTORIZATION_INVARIANT" in out
 
 
 @pytest.mark.slow

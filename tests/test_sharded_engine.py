@@ -21,6 +21,8 @@ except ImportError:   # hermetic container: deterministic fallback sampler
 from repro.core import EscgParams, dominance as dm, engines, simulate
 from repro.core.lattice import init_grid
 
+pytestmark = pytest.mark.composed   # re-run by the CI 8-fake-device job
+
 LOCAL_KERNELS = ("jnp", "pallas")
 
 
@@ -132,10 +134,48 @@ def test_local_kernel_validation():
         EscgParams(engine="sharded", tile=(8, 8), length=16, height=16,
                    local_kernel="cuda").validate()
     # engines that declare supported kernels accept exactly those
-    EscgParams(engine="sharded", tile=(8, 8), length=16, height=16,
-               local_kernel="pallas").validate()
+    for lk in ("pallas", "fused"):
+        EscgParams(engine="sharded", tile=(8, 8), length=16, height=16,
+                   local_kernel=lk).validate()
     # engines that don't consume the knob ignore it (same rule as tile)
     EscgParams(engine="batched", local_kernel="pallas").validate()
+
+
+# --------------- fused local kernel: the second oracle family -------------- #
+# jnp/pallas local kernels answer to `sublattice` (the tests above); the
+# fused kernel derives proposals in-kernel from Philox counters and answers
+# to `pallas_fused` instead (EngineCaps.equiv_oracles, DESIGN.md §6).
+
+def test_sharded_fused_tracks_pallas_fused():
+    """engine='sharded', local_kernel='fused' on a 1x1 mesh follows the
+    single-device pallas_fused engine bit-for-bit through simulate."""
+    kw = dict(length=32, height=16, species=3, mcs=6, chunk_mcs=3,
+              tile=(8, 8), seed=0, mobility=1e-3, empty=0.1)
+    r1 = simulate(EscgParams(engine="pallas_fused", **kw),
+                  stop_on_stasis=False)
+    r2 = simulate(EscgParams(engine="sharded", local_kernel="fused", **kw),
+                  stop_on_stasis=False)
+    np.testing.assert_array_equal(r1.grid, r2.grid)
+    np.testing.assert_allclose(r1.densities, r2.densities, atol=0)
+    assert r1.mcs_completed == r2.mcs_completed
+
+
+def test_sharded_pod_fused_through_trials():
+    """Composed-engine driver path: run_trials with a (1,1,1) mesh and
+    local_kernel='fused' tracks the vmapped pallas_fused batch exactly."""
+    from repro.core.trials import run_trials
+    kw = dict(length=16, height=16, species=5, mobility=1e-3, tile=(8, 8),
+              empty=0.1, seed=4)
+    dom = dm.RPSLS()
+    base = run_trials(EscgParams(engine="pallas_fused", **kw), dom, 3,
+                      n_mcs=4, stop_on_stasis=False)
+    r = run_trials(EscgParams(engine="sharded_pod", mesh_shape=(1, 1, 1),
+                              local_kernel="fused", **kw), dom, 3,
+                   n_mcs=4, stop_on_stasis=False)
+    np.testing.assert_array_equal(r.survival, base.survival)
+    np.testing.assert_array_equal(r.densities, base.densities)
+    np.testing.assert_array_equal(r.stasis_mcs, base.stasis_mcs)
+    np.testing.assert_array_equal(r.extinction_mcs, base.extinction_mcs)
 
 
 def test_sharded_pod_rejects_trial_devices():

@@ -13,6 +13,8 @@ from repro.core.trials import (TrialResult, build_trial_chunk, pad_trials,
                                pod_sharding, run_trials,
                                trial_grids_and_keys)
 
+pytestmark = pytest.mark.composed   # re-run by the CI 8-fake-device job
+
 
 def small_params(**kw):
     base = dict(length=12, height=12, species=3, seed=9)
@@ -76,6 +78,31 @@ def test_stasis_early_exit_and_recording():
     r = run_trials(p, np.zeros((1, 1), np.float32), n_trials=3)
     assert (r.stasis_mcs == 1).all()
     assert r.mcs_completed == 50          # one chunk, then the early exit
+
+
+def test_async_stats_schedule_invariance():
+    """async_stats keeps one speculative chunk in flight while the host
+    folds statistics; the schedule must not leak into ANY result field —
+    including mcs_completed at a stasis early-exit, where the in-flight
+    chunk is dropped unconsumed."""
+    p = small_params(species=5, mobility=1e-4)
+    dom = dm.RPSLS()
+    a = run_trials(p, dom, 4, n_mcs=9, chunk_mcs=2, stop_on_stasis=False,
+                   async_stats=True)
+    b = run_trials(p, dom, 4, n_mcs=9, chunk_mcs=2, stop_on_stasis=False,
+                   async_stats=False)
+    np.testing.assert_array_equal(a.survival, b.survival)
+    np.testing.assert_array_equal(a.densities, b.densities)
+    np.testing.assert_array_equal(a.stasis_mcs, b.stasis_mcs)
+    np.testing.assert_array_equal(a.extinction_mcs, b.extinction_mcs)
+    assert a.mcs_completed == b.mcs_completed == 9
+
+    pe = EscgParams(length=10, height=10, species=1, mcs=500, chunk_mcs=50,
+                    empty=0.5, mu=0.0, sigma=1.0, epsilon=0.0, seed=0)
+    dom1 = np.zeros((1, 1), np.float32)
+    for async_stats in (True, False):
+        r = run_trials(pe, dom1, n_trials=3, async_stats=async_stats)
+        assert r.mcs_completed == 50, async_stats
 
 
 def test_cell_dtype_honoured_and_value_stable():
