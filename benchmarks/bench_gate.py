@@ -17,13 +17,15 @@ functions below (also exposed as ``--validate FILE...`` for CI):
 
 * a *row* must carry ``name`` (non-empty str), ``us_per_call`` (number
   > 0) and ``derived`` (str);
-* the *document* must carry ``schema == "escg-bench-kernels/v1"``,
+* the *document* must carry ``schema == "escg-bench-kernels/v2"``,
   ``backend``/``devices``/``smoke`` metadata and a non-empty ``rows``
   list whose entries extend the row schema with ``family``,
-  ``local_kernel``, ``engine``, ``lattice`` ([H, W]), ``mcs``,
-  ``trials`` and ``updates_per_s`` — and whose rows must cover ALL
-  three local kernels (the acceptance criterion; a sweep that silently
-  drops one fails validation, not review).
+  ``scenario`` (the registered scenario-layer preset the cell ran,
+  DESIGN.md §10 — new in v2), ``local_kernel``, ``engine``, ``lattice``
+  ([H, W]), ``mcs``, ``trials`` and ``updates_per_s`` — and whose rows
+  must cover ALL three local kernels AND all three swept scenarios
+  {park3, zhong_density, nspecies5} (the acceptance criterion; a sweep
+  that silently drops one fails validation, not review).
 
 Run:  [ESCG_BENCH_SMOKE=1] PYTHONPATH=src python -m benchmarks.bench_gate \
           [--out BENCH_kernels.json]
@@ -44,9 +46,13 @@ if os.environ.get("ESCG_FAKE_DEVICES"):
         + " --xla_force_host_platform_device_count="
         + os.environ["ESCG_FAKE_DEVICES"])
 
-SCHEMA = "escg-bench-kernels/v1"
+SCHEMA = "escg-bench-kernels/v2"
 FAMILIES = ("sublattice", "sharded", "sharded_pod")
 LOCAL_KERNELS = ("jnp", "pallas", "fused")
+# scenario-layer sweep (v2): park3 carries the full kernel x family grid;
+# the other study presets pin the jnp kernel per family — the artifact
+# must cover ALL of both tuples (validate_gate_document)
+SCENARIOS = ("park3", "zhong_density", "nspecies5")
 # the sublattice family is the single-device engine of each kernel lineage
 SINGLE_ENGINE = {"jnp": "sublattice", "pallas": "pallas",
                  "fused": "pallas_fused"}
@@ -87,6 +93,7 @@ def validate_gate_row(obj, ctx: str = "row") -> List[str]:
     if not isinstance(obj, dict):
         return errors
     _check(obj, "family", str, errors, ctx)
+    _check(obj, "scenario", str, errors, ctx)
     _check(obj, "local_kernel", str, errors, ctx)
     _check(obj, "engine", str, errors, ctx)
     _check(obj, "lattice", list, errors, ctx)
@@ -97,6 +104,9 @@ def validate_gate_row(obj, ctx: str = "row") -> List[str]:
         return errors
     if obj["family"] not in FAMILIES:
         errors.append(f"{ctx}: family {obj['family']!r} not in {FAMILIES}")
+    if obj["scenario"] not in SCENARIOS:
+        errors.append(f"{ctx}: scenario {obj['scenario']!r} not in "
+                      f"{SCENARIOS}")
     if obj["local_kernel"] not in LOCAL_KERNELS:
         errors.append(f"{ctx}: local_kernel {obj['local_kernel']!r} not in "
                       f"{LOCAL_KERNELS}")
@@ -131,13 +141,14 @@ def validate_gate_document(doc) -> List[str]:
         errors.append("document: rows is empty")
     for i, row in enumerate(doc["rows"]):
         errors.extend(validate_gate_row(row, ctx=f"rows[{i}]"))
-    covered = {r.get("local_kernel") for r in doc["rows"]
-               if isinstance(r, dict)}
-    missing = set(LOCAL_KERNELS) - covered
-    if missing:
-        errors.append(f"document: rows cover local kernels {sorted(covered)}"
-                      f" — missing {sorted(missing)} (all of "
-                      f"{LOCAL_KERNELS} are required)")
+    for fld, want in (("local_kernel", LOCAL_KERNELS),
+                      ("scenario", SCENARIOS)):
+        covered = {r.get(fld) for r in doc["rows"] if isinstance(r, dict)}
+        missing = set(want) - covered
+        if missing:
+            errors.append(f"document: rows cover {fld}s {sorted(covered)} "
+                          f"— missing {sorted(missing)} (all of {want} "
+                          "are required)")
     return errors
 
 
@@ -172,8 +183,13 @@ def validate_file(path: str) -> List[str]:
 
 # -------------------------------- sweep ----------------------------------- #
 
-def _gate_params(family: str, kernel: str):
-    from repro.core import EscgParams
+def _gate_config(family: str, kernel: str, scenario: str):
+    """(EscgParams, Scenario) for one sweep cell — a scenario-layer
+    composition: physics from the registered preset (mobility pinned to
+    1e-4 and empty to 0.1 so occupancy is comparable across studies),
+    engine/run from the cell."""
+    from repro.core.scenarios import (EngineConfig, RunConfig, compose,
+                                      make_scenario)
     from .common import smoke
     L = smoke(32, 64)
     h = smoke(16, 64)
@@ -181,24 +197,27 @@ def _gate_params(family: str, kernel: str):
         engine, lk = SINGLE_ENGINE[kernel], "jnp"   # knob ignored
     else:
         engine, lk = family, kernel
-    return EscgParams(length=L, height=h, species=3, mobility=1e-4,
-                      engine=engine, local_kernel=lk, tile=(8, 16), seed=0,
-                      empty=0.1).validate()
+    sc = make_scenario(scenario).replace(mobility=1e-4, empty=0.1)
+    p = compose(sc, EngineConfig(engine=engine, local_kernel=lk,
+                                 tile=(8, 16)),
+                RunConfig(length=L, height=h, seed=0))
+    return p, sc
 
 
-def _bench_combo(family: str, kernel: str, mcs: int, trials: int) -> dict:
+def _bench_combo(family: str, kernel: str, scenario: str, mcs: int,
+                 trials: int) -> dict:
     """Median time of one jitted chunk (compile excluded, like fig4_3):
     a simulate() chunk for the one-lattice families, a run_trials chunk
     for the composed family."""
     import jax
     import jax.numpy as jnp
 
-    from repro.core import dominance as dm, engines
+    from repro.core import engines
     from repro.core.lattice import init_grid
     from .common import time_fn
 
-    p = _gate_params(family, kernel)
-    dom = jnp.asarray(dm.RPS(), jnp.float32)
+    p, sc = _gate_config(family, kernel, scenario)
+    dom = jnp.asarray(sc.dominance(), jnp.float32)
     built = engines.build(p, dom)
     if family == "sharded_pod":
         from repro.core.trials import (build_trial_chunk, pad_trials,
@@ -226,10 +245,12 @@ def _bench_combo(family: str, kernel: str, mcs: int, trials: int) -> dict:
         trials = 0
     upd_s = n_upd / t
     return {
-        "name": f"kernelgate_{family}_{kernel}",
+        "name": f"kernelgate_{scenario}_{family}_{kernel}",
         "us_per_call": round(t * 1e6, 1),
-        "derived": f"{upd_s / 1e6:.3f} Mupd/s engine={p.engine}",
+        "derived": f"{upd_s / 1e6:.3f} Mupd/s engine={p.engine} "
+                   f"scenario={scenario}",
         "family": family,
+        "scenario": scenario,
         "local_kernel": kernel,
         "engine": p.engine,
         "lattice": [p.height, p.length],
@@ -246,14 +267,18 @@ def run(out_path: Optional[str] = None) -> dict:
 
     mcs = smoke(2, 10)
     trials = smoke(2, 4)
-    note(f"local-kernel gate: {LOCAL_KERNELS} x {FAMILIES}, {mcs} MCS "
-         f"({len(jax.devices())} device(s))")
+    note(f"kernel gate: {LOCAL_KERNELS} x {FAMILIES} on scenario "
+         f"{SCENARIOS[0]!r}, + scenarios {SCENARIOS[1:]} per family "
+         f"(jnp), {mcs} MCS ({len(jax.devices())} device(s))")
+    combos = [(family, kernel, SCENARIOS[0])
+              for family in FAMILIES for kernel in LOCAL_KERNELS]
+    combos += [(family, "jnp", scenario)
+               for scenario in SCENARIOS[1:] for family in FAMILIES]
     rows = []
-    for family in FAMILIES:
-        for kernel in LOCAL_KERNELS:
-            row = _bench_combo(family, kernel, mcs, trials)
-            rows.append(row)
-            emit(row["name"], row["us_per_call"] / 1e6, row["derived"])
+    for family, kernel, scenario in combos:
+        row = _bench_combo(family, kernel, scenario, mcs, trials)
+        rows.append(row)
+        emit(row["name"], row["us_per_call"] / 1e6, row["derived"])
     doc = {
         "schema": SCHEMA,
         "backend": jax.default_backend(),

@@ -3,8 +3,10 @@
 
 Paper protocol: L=100, terminate after L^2 MCS, many IID runs. Here a
 coarse grid at L=32 with vmapped trials; emits the survivors histogram per
-(alpha, beta) cell. benchmarks/run.py keeps this to a 3x3 grid; examples/
-park_alliances.py exposes the full sweep.
+(alpha, beta) cell. Each cell is one invocation of the registered
+``probabilistic`` scenario (``core/scenarios.py``, DESIGN.md §10) with its
+(alpha, beta, gamma) rate knobs. benchmarks/run.py keeps this to a 3x3
+grid; examples/park_alliances.py exposes the full sweep.
 """
 from __future__ import annotations
 

@@ -2,11 +2,13 @@
 sizes and MCS horizons (the dissertation's multimodality audit of Park et
 al.). Reduced: L in {16, 24}, MCS in {0, 200, 600}, 6 IID trials.
 
-Every (L, MCS) cell runs its trial batch through the chunked, device-sharded
-trial driver (``repro.core.trials`` via ``park.species5_extinction_std``):
-the Park protocol — 2000 serial runs in the original — executes in
-device-parallel chunks with streamed per-chunk statistics and per-trial
-stasis early-exit."""
+Every (L, MCS) cell is one invocation of the registered ``probabilistic``
+scenario (the Park alliance physics live in ``core/scenarios.py``,
+DESIGN.md §10) through the chunked, device-sharded trial driver
+(``repro.core.trials`` via ``park.species5_extinction_std``): the Park
+protocol — 2000 serial runs in the original — executes in device-parallel
+chunks with streamed per-chunk statistics and per-trial stasis
+early-exit."""
 from __future__ import annotations
 
 import time

@@ -9,7 +9,8 @@ at much longer horizons — push --mcs up to probe it.
 """
 import argparse
 
-from repro.core import EscgParams, dominance, io, metrics, simulate
+from repro.core import EngineConfig, RunConfig, dominance, io, metrics
+from repro.core import make_scenario, simulate
 
 NAMES = {dominance.ROCK: "Rock", dominance.SCISSORS: "Scissors",
          dominance.LIZARD: "Lizard", dominance.PAPER: "Paper",
@@ -24,12 +25,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=11)
     args = ap.parse_args()
 
-    dom = dominance.zhong_ablated_rpsls()
-    params = EscgParams(length=args.L, height=args.L, species=5,
-                        mobility=1e-4, mcs=args.mcs, chunk_mcs=500,
-                        engine=args.engine, seed=args.seed,
-                        out_dir="out/zhong")
-    res = simulate(params, dom, stop_on_stasis=False)
+    # the whole study is one registered scenario (DESIGN.md §10): physics
+    # (ablated dominance network, mobility, S=5) come from the registry
+    res = simulate(make_scenario("zhong_density"),
+                   engine_config=EngineConfig(engine=args.engine),
+                   run_config=RunConfig(length=args.L, height=args.L,
+                                        mcs=args.mcs, chunk_mcs=500,
+                                        seed=args.seed,
+                                        out_dir="out/zhong"),
+                   stop_on_stasis=False)
 
     print(f"L={args.L}, {args.mcs} MCS, engine={args.engine}")
     for sp in range(1, 6):

@@ -1,17 +1,34 @@
 """Core ESCG engine — the paper's contribution as a composable JAX module."""
 from . import batched, dominance, engines, io, lattice, metrics, park
-from . import reference, rng, rules, simulation, sublattice, trials
+from . import reference, rng, rules, scenarios, simulation, sublattice, trials
 from .engines import BuiltEngine, EngineCaps, EngineSpec, engine_names
 from .engines import engine_specs, get_engine, register
-from .params import ENGINES, EscgParams
+from .params import EscgParams
+from .scenarios import (EngineConfig, RunConfig, Scenario, ScenarioCaps,
+                        ScenarioSpec, compose, decompose, get_scenario,
+                        make_scenario, register_scenario, scenario_names,
+                        scenario_specs)
 from .simulation import SimResult, run_trials, simulate
 from .trials import TrialResult
+
+
+def __getattr__(name: str):
+    # live back-compat alias (see params.__getattr__): a from-import here
+    # would re-freeze the engine list at package-import time
+    if name == "ENGINES":
+        return engine_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "EscgParams", "ENGINES", "SimResult", "simulate", "run_trials",
     "TrialResult",
     "BuiltEngine", "EngineCaps", "EngineSpec", "engine_names",
     "engine_specs", "get_engine", "register",
+    "Scenario", "ScenarioCaps", "ScenarioSpec", "EngineConfig", "RunConfig",
+    "register_scenario", "scenario_names", "scenario_specs", "get_scenario",
+    "make_scenario", "compose", "decompose",
     "batched", "dominance", "engines", "io", "lattice", "metrics", "park",
-    "reference", "rng", "rules", "simulation", "sublattice", "trials",
+    "reference", "rng", "rules", "scenarios", "simulation", "sublattice",
+    "trials",
 ]

@@ -200,8 +200,22 @@ def validate_params(p: "EscgParams") -> None:
             raise ValueError("mesh_shape dims must be >= 1")
 
 
-def build(params: "EscgParams", dom: jax.Array) -> BuiltEngine:
-    """Resolve ``params.engine`` and build its one-MCS function."""
+def build(params: "EscgParams", dom: Optional[jax.Array] = None
+          ) -> BuiltEngine:
+    """Resolve ``params.engine`` and build its one-MCS function.
+
+    Also accepts a scenario-layer ``Scenario`` (DESIGN.md §10) in place of
+    the flat params: it is composed with default engine/run configs, and
+    ``dom=None`` then resolves the dominance network through the scenario
+    registry."""
+    from .scenarios import resolve_config  # lazy: scenarios imports us
+    params, dom = resolve_config(params, dom)
+    if dom is None:
+        # same default as simulate(): the circulant C(S,{1}) cycle
+        from . import dominance as dom_mod
+        dom = dom_mod.circulant(params.species)
+    if not isinstance(dom, jax.Array):
+        dom = jnp.asarray(dom, jnp.float32)
     return get_engine(params.engine).build(params, dom)
 
 

@@ -17,10 +17,15 @@ from typing import Optional, Tuple
 
 from .engines import engine_names, validate_params as _validate_engine
 
-# Update engines (DESIGN.md §2) — defined by the registry in engines.py.
-# Back-compat alias; prefer engines.engine_names() which tracks late
-# registrations.
-ENGINES = engine_names()
+
+def __getattr__(name: str):
+    # Back-compat `params.ENGINES` alias (DESIGN.md §2). A module-level
+    # constant would snapshot engine_names() at import time and go stale
+    # after late @register calls (notebooks, tests, plugins); deferring to
+    # the registry through the module __getattr__ keeps it live.
+    if name == "ENGINES":
+        return engine_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclass(frozen=True)
@@ -138,6 +143,23 @@ class EscgParams:
 
     def replace(self, **kw) -> "EscgParams":
         return dataclasses.replace(self, **kw)
+
+    # -------------------- scenario-layer facade ----------------------- #
+    @classmethod
+    def from_scenario(cls, scenario, engine_config=None,
+                      run_config=None) -> "EscgParams":
+        """Compose a ``Scenario`` (+ optional ``EngineConfig`` /
+        ``RunConfig``) into the legacy flat params — the back-compat
+        facade over the scenario layer (DESIGN.md §10). Bit-identical to
+        hand-building the same ``EscgParams``."""
+        from .scenarios import compose  # lazy: scenarios imports us
+        return compose(scenario, engine_config, run_config)
+
+    def to_scenario(self, name: str = ""):
+        """Decompose into ``(Scenario, EngineConfig, RunConfig)``;
+        ``EscgParams.from_scenario(*p.to_scenario()) == p``."""
+        from .scenarios import decompose  # lazy: scenarios imports us
+        return decompose(self, name=name)
 
 
 def _mesh_shape(s: str) -> Tuple[int, int, int]:

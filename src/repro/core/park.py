@@ -1,10 +1,12 @@
 """Park, Chen & Szolnoki (2023) eight-species alliance model (paper §4.3.2)
 plus the mobility extension of the Cliff & Sinadjan companion paper (App. C).
 
-Park et al.: no mobility (epsilon = 0), probabilistic dominance rates
-(alpha, beta, gamma), L x L lattice, terminate after L^2 MCS, survival
-statistics over many IID runs. The companion paper's contribution is a single
-knob: mobility > 0, which we expose directly.
+Since the scenario layer (DESIGN.md §10) this module is a thin invocation
+of the registered ``probabilistic`` scenario: the physics (S=8, the
+(alpha, beta, gamma) rate network, epsilon=0 unless the companion paper's
+mobility knob is turned) lives in ``core.scenarios``; here we only compose
+it with an engine/run config and stream the trial statistics the figures
+read.
 """
 from __future__ import annotations
 
@@ -13,9 +15,16 @@ from typing import Optional, Tuple
 import jax
 import numpy as np
 
-from .dominance import park_alliance_network
 from .params import EscgParams
+from .scenarios import EngineConfig, RunConfig, Scenario, make_scenario
 from .trials import run_trials
+
+
+def park_scenario(alpha: float = 0.15, beta: float = 0.75,
+                  gamma: float = 1.0, mobility: float = 0.0) -> Scenario:
+    """The registered ``probabilistic`` preset with Park's rate knobs."""
+    return make_scenario("probabilistic", alpha=alpha, beta=beta,
+                         gamma=gamma, mobility=mobility)
 
 
 def park_params(L: int = 100, mcs: Optional[int] = None,
@@ -23,13 +32,14 @@ def park_params(L: int = 100, mcs: Optional[int] = None,
                 seed: int = 0, **kw) -> EscgParams:
     """Paper/Park defaults: S=8, no empties... Park's model has no empty
     sites initially; interactions produce empties which reproduction refills.
-    Terminates after L^2 MCS (paper Fig 4.9/4.10)."""
-    return EscgParams(
-        length=L, height=L, species=8, empty=0.0,
-        mcs=int(mcs if mcs is not None else L * L),
-        mobility=mobility,
-        epsilon=None if mobility > 0 else 0.0,
-        mu=1.0, sigma=1.0, engine=engine, seed=seed, **kw)
+    Terminates after L^2 MCS (paper Fig 4.9/4.10). Back-compat facade:
+    composes the ``probabilistic`` scenario and applies ``**kw`` as flat
+    ``EscgParams`` overrides."""
+    p = park_scenario(mobility=mobility).to_legacy(
+        EngineConfig(engine=engine),
+        RunConfig(length=L, height=L, seed=seed,
+                  mcs=int(mcs if mcs is not None else L * L)))
+    return p.replace(**kw).validate() if kw else p
 
 
 def survival_probabilities(alpha: float, beta: float, gamma: float = 1.0,
@@ -41,14 +51,19 @@ def survival_probabilities(alpha: float, beta: float, gamma: float = 1.0,
                            ) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (per-species survival probability [8], n-survivors histogram
     [9]) over device-sharded IID trials — the quantity behind paper Figs
-    4.9-4.13. Trials run in device-parallel chunks with streamed per-chunk
-    statistics (trials.run_trials); stasis early-exit is safe here because
-    a species can never re-appear after stasis, so the survival mask is
-    frozen from that point on."""
-    params = park_params(L=L, mcs=mcs, mobility=mobility, engine=engine)
-    dom = park_alliance_network(alpha, beta, gamma)
-    res = run_trials(params, dom, n_trials, key=key,
-                     trial_devices=trial_devices)
+    4.9-4.13. One scenario invocation: the trial driver derives the
+    (alpha, beta, gamma) dominance network from the scenario registry and
+    runs device-parallel chunks with streamed per-chunk statistics
+    (trials.run_trials); stasis early-exit is safe here because a species
+    can never re-appear after stasis, so the survival mask is frozen from
+    that point on."""
+    sc = park_scenario(alpha, beta, gamma, mobility)
+    res = run_trials(sc, None, n_trials, key=key,
+                     trial_devices=trial_devices,
+                     engine_config=EngineConfig(engine=engine),
+                     run_config=RunConfig(
+                         length=L, height=L,
+                         mcs=int(mcs if mcs is not None else L * L)))
     return res.survival_probabilities(), res.survivors_hist()
 
 
@@ -61,20 +76,23 @@ def species5_extinction_std(L_values, mcs_values, alpha: float = 0.15,
     """Replication of paper Table 4.2: std of species-5 extinction indicator
     across IID trials, for each (MCS, L). Returns (len(mcs), len(L)).
 
-    Each cell runs its trial batch through the chunked, device-sharded
-    driver, so the Park protocol (2000 serial runs in the original)
-    executes in device-parallel chunks with streamed statistics."""
+    Each cell is one scenario invocation through the chunked,
+    device-sharded driver, so the Park protocol (2000 serial runs in the
+    original) executes in device-parallel chunks with streamed
+    statistics."""
     out = np.zeros((len(mcs_values), len(L_values)))
-    dom = park_alliance_network(alpha, beta, gamma)
+    sc = park_scenario(alpha, beta, gamma)
     for j, L in enumerate(L_values):
         for i, mcs in enumerate(mcs_values):
             if mcs == 0:
                 out[i, j] = 0.0
                 continue
-            params = park_params(L=L, mcs=mcs, engine=engine, seed=seed)
-            res = run_trials(params, dom, n_trials,
+            res = run_trials(sc, None, n_trials,
                              key=jax.random.PRNGKey(seed + 17 * j + i),
-                             trial_devices=trial_devices)
+                             trial_devices=trial_devices,
+                             engine_config=EngineConfig(engine=engine),
+                             run_config=RunConfig(length=L, height=L,
+                                                  mcs=mcs, seed=seed))
             extinct5 = 1.0 - res.survival[:, 4].astype(np.float64)
             out[i, j] = float(extinct5.std())
     return out

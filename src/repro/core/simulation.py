@@ -72,8 +72,15 @@ def simulate(params: EscgParams,
              grid0: Optional[jax.Array] = None,
              key: Optional[jax.Array] = None,
              hooks: Sequence[Callable[[int, jax.Array, np.ndarray], None]] = (),
-             stop_on_stasis: bool = True) -> SimResult:
+             stop_on_stasis: bool = True,
+             engine_config=None, run_config=None) -> SimResult:
     """Run the full simulation (paper Algorithm 3.3 control flow).
+
+    ``params`` is either the legacy flat ``EscgParams`` or a ``Scenario``
+    from the scenario layer (DESIGN.md §10) — with a ``Scenario``, pass
+    ``engine_config`` / ``run_config`` to pick the engine and run control,
+    and ``dom=None`` derives the dominance network from the scenario
+    registry instead of the circulant default.
 
     Chunked stasis early-exit semantics (paper §3.2.2): each jitted chunk
     returns per-MCS population counts; the host scans them for the first
@@ -85,6 +92,8 @@ def simulate(params: EscgParams,
     (``trials.run_trials``) applies the same rule per trial and exits only
     when every trial has reached stasis.
     """
+    from .scenarios import resolve_config  # lazy: scenarios imports core
+    params, dom = resolve_config(params, dom, engine_config, run_config)
     p = params.validate()
     if dom is None:
         dom = dom_mod.circulant(p.species)

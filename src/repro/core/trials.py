@@ -274,8 +274,15 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
                stop_on_stasis: bool = True,
                hooks: Sequence[Callable[[int, np.ndarray], None]] = (),
                async_stats: bool = True,
+               engine_config=None, run_config=None,
                ) -> TrialResult:
     """Run ``n_trials`` IID simulations, vmapped and device-sharded.
+
+    ``params`` is either the legacy flat ``EscgParams`` or a ``Scenario``
+    (DESIGN.md §10): with a ``Scenario``, ``engine_config`` /
+    ``run_config`` select the engine and run control, and ``dom=None``
+    derives the dominance network from the scenario registry instead of
+    the circulant default.
 
     The batch is padded to a multiple of the pod width (``trial_devices``,
     default: all local devices), placed with the trial axis sharded across
@@ -311,6 +318,8 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
     Bit-identical for any ``trial_devices`` and any padding: per-trial
     PRNG keys are ``fold_in(key, trial_index)``.
     """
+    from .scenarios import resolve_config  # lazy: scenarios imports core
+    params, dom = resolve_config(params, dom, engine_config, run_config)
     p = params.validate()
     spec = engines.get_engine(p.engine)
     composed = spec.caps.pod_composable

@@ -25,7 +25,23 @@ composition (DESIGN.md §4-§6):
   (rows, cols) with halo exchange. Bit-identical to the single-device
   run for any factorization.
 
+The scenario layer (DESIGN.md §10) makes every registered study a one-flag
+invocation: ``--scenario NAME`` pulls species count, dominance network,
+action rates and boundary condition from the scenario registry
+(``core/scenarios.py``); explicitly-passed physics flags override the
+preset, and parametric families take a numeric suffix (``nspecies7``).
+``--listScenarios [--markdown|--check README.md]`` prints/CI-checks the
+registry-generated scenario matrix, exactly like ``--listEngines`` does
+for engines.
+
 Examples:
+  python -m repro.launch.escg_run --scenario zhong_density --mcs 1000 \
+      --length 64 --height 64          # Zhong ablated RPSLS, one flag
+  python -m repro.launch.escg_run --scenario probabilistic --trials 64 \
+      --mcs 10000                      # Park alliances, massed replication
+  python -m repro.launch.escg_run --scenario nspecies7 --mcs 2000 \
+      --engine sublattice --tile 8 16  # 7-species cyclic family
+  python -m repro.launch.escg_run --listScenarios --markdown
   python -m repro.launch.escg_run --length 200 --height 200 --mcs 2000 \
       --engine batched --save true --outDir out/rps
   python -m repro.launch.escg_run --dominance dominance.csv --resume true \
@@ -52,19 +68,52 @@ import jax
 import numpy as np
 
 from ..core import dominance as dom_mod
-from ..core import engines
+from ..core import engines, scenarios
 from ..core import io as io_mod
 from ..core.params import EscgParams, add_cli_args, params_from_args
 from ..core.simulation import simulate
 from ..core.trials import run_trials
 
-# ------------------------- engine matrix (docs) --------------------------- #
+# ---------------------- registry matrices (docs) -------------------------- #
+# Both README tables — engines and scenarios — are generated from their
+# registries and CI-checked against drift with the same marker mechanism.
 
 _MATRIX_HEAD = ("engine", "boundaries", "tile", "devices", "trial axis",
                 "local kernels", "reproduces")
 _MATRIX_BEGIN = ("<!-- engine-matrix:begin (generated: escg_run "
                  "--listEngines --markdown; CI-checked) -->")
 _MATRIX_END = "<!-- engine-matrix:end -->"
+
+_SC_MATRIX_HEAD = ("scenario", "species", "rates", "boundary", "init",
+                   "observables", "reproduces")
+_SC_MATRIX_BEGIN = ("<!-- scenario-matrix:begin (generated: escg_run "
+                    "--listScenarios --markdown; CI-checked) -->")
+_SC_MATRIX_END = "<!-- scenario-matrix:end -->"
+
+
+def _markdown_table(head, rows) -> str:
+    lines = ["| " + " | ".join(head) + " |", "|" + "---|" * len(head)]
+    lines += ["| " + " | ".join(row) + " |" for row in rows]
+    return "\n".join(lines)
+
+
+def _readme_block_drift(readme_path: str, begin: str, end: str, want: str,
+                        what: str, regen_flag: str) -> Optional[str]:
+    """None when the README block between ``begin``/``end`` equals the
+    registry-generated table; else a human-readable drift message."""
+    with open(readme_path) as f:
+        text = f.read()
+    m = re.search(re.escape(begin) + r"\n(.*?)\n" + re.escape(end),
+                  text, re.S)
+    if not m:
+        return f"{readme_path}: {what} markers not found"
+    got = m.group(1).strip()
+    if got != want.strip():
+        return (f"{readme_path}: {what} drifted from the registry.\n"
+                f"Regenerate with:\n  PYTHONPATH=src python -m "
+                f"repro.launch.escg_run {regen_flag} --markdown\n"
+                f"--- README ---\n{got}\n--- registry ---\n{want.strip()}")
+    return None
 
 
 def engine_matrix_rows():
@@ -86,31 +135,44 @@ def engine_matrix_rows():
 
 def engine_matrix_markdown() -> str:
     """The README engine matrix, generated from the live registry."""
-    lines = ["| " + " | ".join(_MATRIX_HEAD) + " |",
-             "|" + "---|" * len(_MATRIX_HEAD)]
-    for row in engine_matrix_rows():
-        lines.append("| " + " | ".join(row) + " |")
-    return "\n".join(lines)
+    return _markdown_table(_MATRIX_HEAD, engine_matrix_rows())
 
 
 def readme_matrix_drift(readme_path: str) -> Optional[str]:
-    """None when the README block between the engine-matrix markers equals
-    the registry-generated table; else a human-readable drift message.
-    Used by ``--listEngines --check`` (CI) and tests/test_docs.py."""
-    with open(readme_path) as f:
-        text = f.read()
-    m = re.search(re.escape(_MATRIX_BEGIN) + r"\n(.*?)\n"
-                  + re.escape(_MATRIX_END), text, re.S)
-    if not m:
-        return f"{readme_path}: engine-matrix markers not found"
-    want = engine_matrix_markdown().strip()
-    got = m.group(1).strip()
-    if got != want:
-        return (f"{readme_path}: engine matrix drifted from the registry.\n"
-                f"Regenerate with:\n  PYTHONPATH=src python -m "
-                f"repro.launch.escg_run --listEngines --markdown\n"
-                f"--- README ---\n{got}\n--- registry ---\n{want}")
-    return None
+    """Engine-matrix drift check: used by ``--listEngines --check`` (CI)
+    and tests/test_docs.py."""
+    return _readme_block_drift(readme_path, _MATRIX_BEGIN, _MATRIX_END,
+                               engine_matrix_markdown(), "engine matrix",
+                               "--listEngines")
+
+
+def scenario_matrix_rows():
+    """One row per registered scenario, derived from ScenarioCaps."""
+    rows = []
+    for spec in scenarios.scenario_specs():
+        c = spec.caps
+        rows.append((f"`{spec.name}`",
+                     "parametric (`S`)" if c.species is None
+                     else str(c.species),
+                     c.rates,
+                     c.boundary,
+                     c.init,
+                     ", ".join(f"`{o}`" for o in c.observables) or "—",
+                     f"{c.paper} — {c.description}"))
+    return rows
+
+
+def scenario_matrix_markdown() -> str:
+    """The README scenario matrix, generated from the live registry."""
+    return _markdown_table(_SC_MATRIX_HEAD, scenario_matrix_rows())
+
+
+def readme_scenario_drift(readme_path: str) -> Optional[str]:
+    """Scenario-matrix drift check: used by ``--listScenarios --check``
+    (CI) and tests/test_docs.py."""
+    return _readme_block_drift(readme_path, _SC_MATRIX_BEGIN,
+                               _SC_MATRIX_END, scenario_matrix_markdown(),
+                               "scenario matrix", "--listScenarios")
 
 
 def print_engine_matrix() -> None:
@@ -124,6 +186,18 @@ def print_engine_matrix() -> None:
               f"{'multi' if c.multi_device else 'single':<8} "
               f"{c.trial_axis:<17} {c.paper}")
         print(f"{'':13} {spec.caps.description}")
+
+
+def print_scenario_matrix() -> None:
+    """Registry-driven scenario table (plain-text variant)."""
+    print(f"{'scenario':<15} {'species':<9} {'rates':<14} {'boundary':<9} "
+          "paper ref")
+    for spec in scenarios.scenario_specs():
+        c = spec.caps
+        sp = "S (param)" if c.species is None else str(c.species)
+        print(f"{spec.name:<15} {sp:<9} {c.rates:<14} {c.boundary:<9} "
+              f"{c.paper}")
+        print(f"{'':15} {c.description}")
 
 
 # ------------------------------ trial mode -------------------------------- #
@@ -165,7 +239,9 @@ def run_trial_batch(params: EscgParams, dom: np.ndarray, n_trials: int,
 
 # --------------------------------- main ----------------------------------- #
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The full CLI parser (paper flags + scaling + scenario layer) —
+    exposed so tests can drive the exact ``--scenario`` resolution path."""
     ap = argparse.ArgumentParser(description="ESCG simulator (paper CLI)")
     add_cli_args(ap)
     ap.add_argument("--snapshotEvery", dest="snapshot_every", type=int,
@@ -179,29 +255,66 @@ def main() -> None:
                     help="pod width for --trials: number of local devices "
                          "to shard the trial axis across (default: all; "
                          "results are bit-identical for any value)")
+    ap.add_argument("--scenario", type=str, default=None,
+                    help="run a registered scenario preset (see "
+                         "--listScenarios); its physics — species, "
+                         "dominance network, rates, boundary — come from "
+                         "the registry, overridden by explicitly-passed "
+                         "flags; parametric families take a numeric "
+                         "suffix (nspecies7)")
     ap.add_argument("--listEngines", dest="list_engines",
                     action="store_true",
                     help="print the registered engine matrix and exit")
+    ap.add_argument("--listScenarios", dest="list_scenarios",
+                    action="store_true",
+                    help="print the registered scenario matrix and exit")
     ap.add_argument("--markdown", action="store_true",
-                    help="with --listEngines: print the matrix as the "
-                         "markdown table embedded in README.md")
+                    help="with --listEngines/--listScenarios: print the "
+                         "matrix as the markdown table embedded in "
+                         "README.md")
     ap.add_argument("--check", dest="check_readme", metavar="README",
                     default=None,
-                    help="with --listEngines: exit non-zero if README's "
-                         "engine matrix drifted from the registry (CI)")
+                    help="with --listEngines/--listScenarios: exit "
+                         "non-zero if README's matrix drifted from the "
+                         "registry (CI)")
+    return ap
+
+
+def scenario_setup(args, ap: argparse.ArgumentParser):
+    """Resolve ``--scenario``: (validated EscgParams, dominance matrix).
+    Physics come from the registry preset, overridden by explicitly-passed
+    scenario flags; engine/run control from the remaining CLI flags."""
+    sc = scenarios.scenario_from_cli(args, ap)
+    params = scenarios.compose(
+        sc, scenarios.engine_config_from_args(args),
+        scenarios.run_config_from_args(args))
+    return sc, params, sc.dominance()
+
+
+def main() -> None:
+    ap = build_parser()
     args = ap.parse_args()
 
-    if args.list_engines:
-        if args.check_readme:
-            drift = readme_matrix_drift(args.check_readme)
-            if drift:
-                raise SystemExit(drift)
-            print(f"[escg] {args.check_readme} engine matrix matches the "
-                  "registry")
-        elif args.markdown:
-            print(engine_matrix_markdown())
-        else:
-            print_engine_matrix()
+    if args.list_engines or args.list_scenarios:
+        for flagged, drift_fn, md_fn, text_fn, what in (
+                (args.list_engines, readme_matrix_drift,
+                 engine_matrix_markdown, print_engine_matrix,
+                 "engine matrix"),
+                (args.list_scenarios, readme_scenario_drift,
+                 scenario_matrix_markdown, print_scenario_matrix,
+                 "scenario matrix")):
+            if not flagged:
+                continue
+            if args.check_readme:
+                drift = drift_fn(args.check_readme)
+                if drift:
+                    raise SystemExit(drift)
+                print(f"[escg] {args.check_readme} {what} matches the "
+                      "registry")
+            elif args.markdown:
+                print(md_fn())
+            else:
+                text_fn()
         return
 
     grid0 = None
@@ -211,6 +324,10 @@ def main() -> None:
         if args.trials:
             raise SystemExit("--trials and --resume are mutually exclusive "
                              "(trial batches keep no host-side state)")
+        if args.scenario:
+            raise SystemExit("--scenario and --resume are mutually "
+                             "exclusive (the resumed state already "
+                             "carries its physics)")
         params, grid0, start_mcs, dom, key_arr = io_mod.load_state(
             args.out_dir)
         params = params.replace(resume=True)
@@ -220,6 +337,18 @@ def main() -> None:
         # allow the CLI to extend the run beyond the saved target
         params = params.replace(mcs=max(params.mcs, args.mcs))
         print(f"[escg] resumed {args.out_dir} at MCS {start_mcs}")
+    elif args.scenario:
+        # scenario layer (DESIGN.md §10): physics from the registry,
+        # engine/run control from the CLI; explicitly-passed scenario
+        # flags (--species, --mobility, ...) override the preset
+        if args.dominance:
+            raise SystemExit("--scenario and --dominance are mutually "
+                             "exclusive (the scenario defines its own "
+                             "dominance network)")
+        sc, params, dom = scenario_setup(args, ap)
+        print(f"[escg] scenario {sc.name!r}: species={sc.species} "
+              f"rates={scenarios.get_scenario(sc.name).caps.rates} "
+              f"boundary={sc.boundary}")
     else:
         params = params_from_args(args)
         if args.dominance:

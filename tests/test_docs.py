@@ -6,7 +6,9 @@ import os
 import re
 
 from repro.launch.escg_run import (engine_matrix_markdown,
-                                   readme_matrix_drift)
+                                   readme_matrix_drift,
+                                   readme_scenario_drift,
+                                   scenario_matrix_markdown)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -20,6 +22,18 @@ def test_engine_matrix_lists_every_engine():
     from repro.core import engines
     md = engine_matrix_markdown()
     for name in engines.engine_names():
+        assert f"`{name}`" in md, name
+
+
+def test_readme_scenario_matrix_matches_registry():
+    drift = readme_scenario_drift(os.path.join(REPO, "README.md"))
+    assert drift is None, drift
+
+
+def test_scenario_matrix_lists_every_scenario():
+    from repro.core import scenarios
+    md = scenario_matrix_markdown()
+    for name in scenarios.scenario_names():
         assert f"`{name}`" in md, name
 
 
@@ -57,6 +71,6 @@ def test_benchmarks_readme_covers_every_module():
 
 def test_ci_checks_readme_matrix():
     with open(os.path.join(REPO, ".github", "workflows", "ci.yml")) as f:
-        ci = f.read()
-    assert "--listEngines --check README.md" in ci.replace("\n          ",
-                                                           " ")
+        ci = f.read().replace("\n          ", " ")
+    assert "--listEngines --check README.md" in ci
+    assert "--listScenarios --check README.md" in ci

@@ -144,6 +144,55 @@ def test_trial_driver_matches_oracle(name, local_kernel):
     np.testing.assert_array_equal(r.extinction_mcs, ro.extinction_mcs)
 
 
+def _reflecting_engines():
+    """Every engine that supports reflecting (flux=False) boundaries —
+    registry-driven, so a new boundary-agnostic engine is covered the
+    moment it registers."""
+    return [spec.name for spec in engines.engine_specs()
+            if not spec.caps.flux_only]
+
+
+@pytest.mark.parametrize("name", _reflecting_engines())
+def test_reflecting_boundaries_deterministic_and_conserving(name):
+    """flux=False (reflecting walls) is a first-class scenario boundary
+    (Scenario.boundary='reflect', DESIGN.md §10): every engine whose caps
+    admit it must run reflecting runs deterministically and conserve the
+    cell count."""
+    p = _params(name, flux=False)
+    r1 = simulate(p, _dom(), stop_on_stasis=False)
+    r2 = simulate(p, _dom(), stop_on_stasis=False)
+    np.testing.assert_array_equal(r1.grid, r2.grid)
+    np.testing.assert_array_equal(r1.densities, r2.densities)
+    np.testing.assert_allclose(r1.densities.sum(axis=1), 1.0, atol=1e-6)
+    assert r1.mcs_completed == N_MCS
+
+
+@pytest.mark.parametrize("name", _reflecting_engines())
+def test_reflecting_boundaries_change_the_trajectory(name):
+    """flux must actually matter: reflecting walls break the torus, so
+    the trajectory differs from the periodic run of the same seed — a
+    silently ignored boundary flag would pass the determinism test."""
+    r_flux = simulate(_params(name, flux=True), _dom(),
+                      stop_on_stasis=False)
+    r_refl = simulate(_params(name, flux=False), _dom(),
+                      stop_on_stasis=False)
+    assert not np.array_equal(r_flux.grid, r_refl.grid)
+
+
+@pytest.mark.parametrize("name", _reflecting_engines())
+def test_reflecting_trial_driver(name):
+    """run_trials accepts reflecting boundaries on every engine that
+    supports them (vmappable ones), with reproducible statistics."""
+    spec = engines.get_engine(name)
+    if not (spec.caps.vmappable or spec.caps.pod_composable):
+        pytest.skip(f"engine {name!r} cannot run trial batches")
+    kw = dict(n_trials=2, n_mcs=2, stop_on_stasis=False)
+    r1 = run_trials(_params(name, flux=False), _dom(), **kw)
+    r2 = run_trials(_params(name, flux=False), _dom(), **kw)
+    np.testing.assert_array_equal(r1.survival, r2.survival)
+    np.testing.assert_array_equal(r1.densities, r2.densities)
+
+
 def test_every_oracle_is_registered():
     """Every oracle name — kernel-independent equiv_oracle AND the
     per-local-kernel equiv_oracles overrides — must resolve; a typo would

@@ -1,0 +1,262 @@
+"""Scenario layer (DESIGN.md §10): registry, composition, back-compat
+facade parity, CLI resolution and the nspecies relabeling symmetry.
+
+The load-bearing guarantees:
+
+* decomposing the config API must not move a single bit — ``park3``
+  composed through the legacy ``EscgParams`` facade reproduces the
+  checked-in pre-redesign golden trajectory exactly;
+* every registered scenario must run end-to-end through the CLI
+  ``--scenario`` path on the vmapped (``batched``), tiled
+  (``sublattice``) and composed-mesh (``sharded_pod``) engines — the
+  acceptance criterion of the redesign;
+* ``compose``/``decompose`` and every config dataclass JSON round-trip.
+"""
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EscgParams, dominance as dm, engines, lattice
+from repro.core import scenarios as sc_mod
+from repro.core.scenarios import (EngineConfig, RunConfig, Scenario,
+                                  compose, decompose, make_scenario,
+                                  scenario_names)
+from repro.core.simulation import simulate
+from repro.core.trials import run_trials
+from repro.launch.escg_run import build_parser, scenario_setup
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
+                      "reference_trajectory.json")
+
+PRESETS = ("park3", "zhong_density", "nspecies5", "probabilistic",
+           "asym_rps")
+
+
+# ------------------------------- registry --------------------------------- #
+
+def test_presets_registered():
+    names = scenario_names()
+    for name in ("park3", "zhong_density", "nspecies", "probabilistic",
+                 "asym_rps"):
+        assert name in names, name
+
+
+def test_parametric_suffix_resolution():
+    sc = make_scenario("nspecies7")
+    assert sc.species == 7 and sc.name == "nspecies7"
+    assert make_scenario("nspecies", S=7) == sc
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario("park9")          # park3 is fixed, not parametric
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario("no_such_scenario")
+
+
+def test_builder_knobs_route_to_builder():
+    """Overrides the builder declares keep preset-internal coupling:
+    Park's mobility knob flips epsilon between 0 (no migration) and the
+    2*M*N paper default."""
+    assert make_scenario("probabilistic").epsilon == 0.0
+    sc = make_scenario("probabilistic", mobility=1e-4)
+    assert sc.epsilon is None and sc.mobility == 1e-4
+    assert make_scenario("probabilistic", alpha=0.3).extra("alpha") == 0.3
+    with pytest.raises(ValueError, match="accepts builder knobs"):
+        make_scenario("park3", alpha=0.3)
+
+
+def test_fixed_species_cannot_be_overridden():
+    with pytest.raises(ValueError, match="fixed 8-species"):
+        make_scenario("probabilistic", species=5)
+
+
+def test_scenario_dominance_matches_study_networks():
+    np.testing.assert_array_equal(make_scenario("park3").dominance(),
+                                  dm.RPS())
+    np.testing.assert_array_equal(
+        make_scenario("zhong_density").dominance(), dm.zhong_ablated_rpsls())
+    np.testing.assert_array_equal(
+        make_scenario("nspecies7").dominance(), dm.circulant(7, (1, 2)))
+    np.testing.assert_array_equal(
+        make_scenario("nspecies3").dominance(), dm.circulant(3, (1,)))
+    np.testing.assert_array_equal(
+        make_scenario("probabilistic", alpha=0.2, beta=0.6).dominance(),
+        dm.park_alliance_network(0.2, 0.6, 1.0))
+    d = make_scenario("asym_rps").dominance()
+    assert d[1, 2] == 1.0 and np.isclose(d[2, 3], 0.7) \
+        and np.isclose(d[3, 1], 0.4)
+    # ad-hoc scenarios fall back to the legacy circulant default
+    np.testing.assert_array_equal(Scenario(species=4).dominance(),
+                                  dm.circulant(4))
+
+
+# ------------------------- JSON / composition ------------------------------ #
+
+def test_config_json_round_trips():
+    sc = make_scenario("probabilistic", alpha=0.3, beta=0.6, gamma=0.9)
+    assert Scenario.from_json(sc.to_json()) == sc
+    eng = EngineConfig(engine="sharded_pod", tile=(8, 16),
+                       mesh_shape=(2, 1, 2), local_kernel="fused")
+    assert EngineConfig.from_json(eng.to_json()) == eng
+    run = RunConfig(length=64, height=32, mcs=123, seed=9, save=True)
+    assert RunConfig.from_json(run.to_json()) == run
+    # a round-tripped scenario rebuilds its dominance from the registry
+    rt = Scenario.from_json(sc.to_json())
+    np.testing.assert_array_equal(rt.dominance(), sc.dominance())
+
+
+@pytest.mark.parametrize("name", PRESETS)
+def test_compose_decompose_round_trip(name):
+    p = compose(make_scenario(name), EngineConfig(tile=(8, 16)),
+                RunConfig(length=32, height=16, mcs=7, seed=3))
+    sc, eng, run = decompose(p, name=name)
+    assert compose(sc, eng, run) == p
+    assert EscgParams.from_scenario(*p.to_scenario(name=name)) == p
+
+
+def test_reflecting_scenario_on_flux_only_engine_names_both():
+    sc = make_scenario("park3", boundary="reflect")
+    with pytest.raises(ValueError) as ei:
+        compose(sc, EngineConfig(engine="sublattice"))
+    msg = str(ei.value)
+    assert "park3" in msg and "sublattice" in msg and "reflect" in msg
+    # boundary-agnostic engines accept the same scenario
+    assert compose(sc, EngineConfig(engine="batched")).flux is False
+
+
+def test_resolve_config_rejects_configs_with_flat_params():
+    with pytest.raises(ValueError, match="only apply"):
+        sc_mod.resolve_config(EscgParams(), engine_config=EngineConfig())
+
+
+# --------------------------- facade parity --------------------------------- #
+
+def _grid_hash(grid: np.ndarray) -> str:
+    return hashlib.sha256(
+        np.ascontiguousarray(grid.astype("<i4")).tobytes()).hexdigest()
+
+
+def test_park3_facade_bit_identical_to_pre_redesign_golden():
+    """THE back-compat guarantee: park3 composed through the scenario
+    layer reproduces byte-for-byte the flat-EscgParams golden trajectory
+    recorded before the redesign (tests/golden/, unregenerated)."""
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    sc = make_scenario("park3", mobility=1e-3, empty=0.1)
+    p = EscgParams.from_scenario(
+        sc, EngineConfig(engine="reference"),
+        RunConfig(length=12, height=12, mcs=5, chunk_mcs=1, seed=42))
+    # the facade composes to exactly the frozen pre-redesign params ...
+    assert json.loads(p.to_json()) == want["params"]
+    # ... and the scenario-first driver path replays the frozen trajectory
+    res = simulate(sc, engine_config=EngineConfig(engine="reference"),
+                   run_config=RunConfig(length=12, height=12, mcs=5,
+                                        chunk_mcs=1, seed=42),
+                   stop_on_stasis=False)
+    assert _grid_hash(res.grid) == want["final_hash"]
+    np.testing.assert_array_equal(res.densities,
+                                  np.asarray(want["densities"]))
+
+
+def test_scenario_and_flat_params_drivers_bit_identical():
+    """simulate(Scenario) == simulate(compose(Scenario)) with the
+    registry dominance — the Scenario overload adds no PRNG consumption."""
+    sc = make_scenario("zhong_density")
+    eng = EngineConfig(engine="batched")
+    run = RunConfig(length=16, height=16, mcs=3, chunk_mcs=3, seed=1)
+    r_sc = simulate(sc, engine_config=eng, run_config=run,
+                    stop_on_stasis=False)
+    r_flat = simulate(compose(sc, eng, run), sc.dominance(),
+                      stop_on_stasis=False)
+    np.testing.assert_array_equal(r_sc.grid, r_flat.grid)
+    np.testing.assert_array_equal(r_sc.densities, r_flat.densities)
+
+
+def test_trial_driver_accepts_scenarios():
+    sc = make_scenario("nspecies5")
+    run = RunConfig(length=16, height=16, seed=2)
+    r_sc = run_trials(sc, None, 2, n_mcs=2, stop_on_stasis=False,
+                      run_config=run)
+    r_flat = run_trials(compose(sc, None, run), sc.dominance(), 2,
+                        n_mcs=2, stop_on_stasis=False)
+    np.testing.assert_array_equal(r_sc.survival, r_flat.survival)
+    np.testing.assert_array_equal(r_sc.densities, r_flat.densities)
+
+
+# ----------------------------- CLI acceptance ------------------------------ #
+
+@pytest.mark.parametrize("engine", ("batched", "sublattice", "sharded_pod"))
+@pytest.mark.parametrize("scenario", PRESETS)
+def test_every_scenario_runs_through_cli_on_every_engine_tier(scenario,
+                                                              engine):
+    """Acceptance criterion: every registered scenario runs through the
+    CLI ``--scenario`` resolution path on the vmapped, tiled and
+    composed-mesh engines."""
+    ap = build_parser()
+    args = ap.parse_args(["--scenario", scenario, "--engine", engine,
+                          "--length", "16", "--height", "16",
+                          "--mcs", "2", "--chunkMcs", "2",
+                          "--tile", "8", "16"])
+    sc, params, dom = scenario_setup(args, ap)
+    assert params.engine == engine and params.species == sc.species
+    res = simulate(params, dom, stop_on_stasis=False)
+    assert res.mcs_completed == 2
+    np.testing.assert_allclose(res.densities.sum(axis=1), 1.0, atol=1e-6)
+
+
+def test_cli_explicit_flags_override_the_preset():
+    ap = build_parser()
+    args = ap.parse_args(["--scenario", "zhong_density",
+                          "--mobility", "5e-4", "--empty", "0.2"])
+    sc = sc_mod.scenario_from_cli(args, ap)
+    assert sc.mobility == 5e-4 and sc.empty == 0.2
+    assert sc.species == 5          # un-passed physics stay preset-owned
+
+
+# ------------------------ nspecies relabel symmetry ------------------------ #
+
+def test_nspecies_relabeling_symmetry():
+    """The cyclic family is equivariant under cyclic species relabeling:
+    rotating every label in the initial lattice rotates the whole
+    trajectory (the circulant dominance network is rotation-invariant and
+    the engines consume cell values only through dominance lookups)."""
+    sc = make_scenario("nspecies5")
+    p = compose(sc, EngineConfig(engine="batched"),
+                RunConfig(length=12, height=12, mcs=3, chunk_mcs=3, seed=6))
+    dom = sc.dominance()
+    key = jax.random.PRNGKey(123)
+    grid0 = np.asarray(lattice.init_grid(
+        jax.random.fold_in(key, 1), p.height, p.length, p.species, 0.1))
+    lut = np.array([0] + [i % sc.species + 1
+                          for i in range(1, sc.species + 1)])
+    r = simulate(p, dom, grid0=grid0, key=key, stop_on_stasis=False)
+    r_rot = simulate(p, dom, grid0=lut[grid0], key=key,
+                     stop_on_stasis=False)
+    np.testing.assert_array_equal(r_rot.grid, lut[r.grid])
+
+
+# ----------------------- ENGINES back-compat alias ------------------------- #
+
+def test_engines_alias_tracks_late_registration():
+    """params.ENGINES / repro.core.ENGINES are live views of the engine
+    registry (module __getattr__), not an import-time snapshot — a
+    late-registered engine must appear in both."""
+    import repro.core as core
+    from repro.core import params as params_mod
+    name = "dummy_late_engine"
+    assert name not in params_mod.ENGINES
+
+    @engines.register(name, engines.EngineCaps(
+        description="late-registration probe"))
+    def _build_dummy(p, d):            # pragma: no cover - never built
+        raise NotImplementedError
+    try:
+        assert name in params_mod.ENGINES
+        assert name in core.ENGINES
+        assert tuple(params_mod.ENGINES) == engines.engine_names()
+    finally:
+        engines._REGISTRY.pop(name, None)
+    assert name not in params_mod.ENGINES
