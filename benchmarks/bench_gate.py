@@ -17,18 +17,37 @@ functions below (also exposed as ``--validate FILE...`` for CI):
 
 * a *row* must carry ``name`` (non-empty str), ``us_per_call`` (number
   > 0) and ``derived`` (str);
-* the *document* must carry ``schema == "escg-bench-kernels/v2"``,
+* the *document* must carry ``schema == "escg-bench-kernels/v3"``,
   ``backend``/``devices``/``smoke`` metadata and a non-empty ``rows``
   list whose entries extend the row schema with ``family``,
   ``scenario`` (the registered scenario-layer preset the cell ran,
-  DESIGN.md §10 — new in v2), ``local_kernel``, ``engine``, ``lattice``
-  ([H, W]), ``mcs``, ``trials`` and ``updates_per_s`` — and whose rows
-  must cover ALL three local kernels AND all three swept scenarios
-  {park3, zhong_density, nspecies5} (the acceptance criterion; a sweep
-  that silently drops one fails validation, not review).
+  DESIGN.md §10), ``local_kernel``, ``engine``, ``backend`` (new in v3
+  — rows are self-identifying so history lines compare across
+  runners), ``lattice`` ([H, W]), ``mcs``, ``n_trials`` (the REQUESTED
+  trial count; 0 for the single-lattice families), ``n_pad`` (the
+  padded batch that actually ran — v2 conflated the two as ``trials``
+  and normalized throughput over padding), ``updates_per_s``
+  (normalized over *useful* updates: ``mcs * n_cells * max(n_trials,
+  1)``, never the padded batch) and ``timing`` (per-call stats:
+  ``median_us`` / ``mean_us`` / ``min_us`` / ``max_us`` / ``n``) — and
+  whose rows must cover ALL three local kernels AND all three swept
+  scenarios {park3, zhong_density, nspecies5} (the acceptance
+  criterion; a sweep that silently drops one fails validation, not
+  review).
+
+Beyond schema validation the gate now *bites*: ``--compare BASELINE``
+diffs the fresh sweep against a committed document and exits non-zero
+when any matching ``(family, scenario, local_kernel, backend)`` row
+regresses ``updates_per_s`` by more than ``--regressionThreshold``
+(fraction; CI uses 0.75 — generous because CPU-runner jitter is real,
+but a genuine order-of-magnitude regression still fails the build).
+``--history FILE`` appends the full document as one JSONL line (the
+perf trajectory artifact CI uploads); ``--candidate FILE`` compares an
+existing document instead of re-benchmarking.
 
 Run:  [ESCG_BENCH_SMOKE=1] PYTHONPATH=src python -m benchmarks.bench_gate \
-          [--out BENCH_kernels.json]
+          [--out BENCH_kernels.json] [--compare BENCH_kernels.json] \
+          [--regressionThreshold 0.75] [--history BENCH_history.jsonl]
       PYTHONPATH=src python -m benchmarks.bench_gate --validate FILE...
 """
 from __future__ import annotations
@@ -37,6 +56,7 @@ import argparse
 import json
 import os
 import sys
+import time
 from typing import List, Optional
 
 # must happen before the first jax import anywhere in the process
@@ -46,7 +66,7 @@ if os.environ.get("ESCG_FAKE_DEVICES"):
         + " --xla_force_host_platform_device_count="
         + os.environ["ESCG_FAKE_DEVICES"])
 
-SCHEMA = "escg-bench-kernels/v2"
+SCHEMA = "escg-bench-kernels/v3"
 FAMILIES = ("sublattice", "sharded", "sharded_pod")
 LOCAL_KERNELS = ("jnp", "pallas", "fused")
 # scenario-layer sweep (v2): park3 carries the full kernel x family grid;
@@ -88,6 +108,9 @@ def validate_row(obj, ctx: str = "row") -> List[str]:
     return errors
 
 
+TIMING_FIELDS = ("median_us", "mean_us", "min_us", "max_us", "n")
+
+
 def validate_gate_row(obj, ctx: str = "row") -> List[str]:
     errors = validate_row(obj, ctx)
     if not isinstance(obj, dict):
@@ -96,10 +119,13 @@ def validate_gate_row(obj, ctx: str = "row") -> List[str]:
     _check(obj, "scenario", str, errors, ctx)
     _check(obj, "local_kernel", str, errors, ctx)
     _check(obj, "engine", str, errors, ctx)
+    _check(obj, "backend", str, errors, ctx)
     _check(obj, "lattice", list, errors, ctx)
     _check(obj, "mcs", int, errors, ctx)
-    _check(obj, "trials", int, errors, ctx)
+    _check(obj, "n_trials", int, errors, ctx)
+    _check(obj, "n_pad", int, errors, ctx)
     _check(obj, "updates_per_s", (int, float), errors, ctx)
+    _check(obj, "timing", dict, errors, ctx)
     if errors:
         return errors
     if obj["family"] not in FAMILIES:
@@ -115,10 +141,21 @@ def validate_gate_row(obj, ctx: str = "row") -> List[str]:
                        for v in obj["lattice"])):
         errors.append(f"{ctx}: lattice must be [H, W] positive ints, got "
                       f"{obj['lattice']!r}")
-    if obj["mcs"] < 0 or obj["trials"] < 0:
-        errors.append(f"{ctx}: mcs/trials must be >= 0")
+    if obj["mcs"] < 0 or obj["n_trials"] < 0:
+        errors.append(f"{ctx}: mcs/n_trials must be >= 0")
+    if obj["n_pad"] < obj["n_trials"]:
+        errors.append(f"{ctx}: n_pad ({obj['n_pad']}) < n_trials "
+                      f"({obj['n_trials']}) — padding can only grow the "
+                      "batch")
     if obj["updates_per_s"] < 0:
         errors.append(f"{ctx}: updates_per_s must be >= 0")
+    for fld in TIMING_FIELDS:
+        v = obj["timing"].get(fld)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v <= 0:
+            errors.append(f"{ctx}: timing[{fld!r}] must be a positive "
+                          f"number, got {v!r}")
+    if not errors and obj["timing"]["min_us"] > obj["timing"]["max_us"]:
+        errors.append(f"{ctx}: timing min_us > max_us")
     return errors
 
 
@@ -153,8 +190,11 @@ def validate_gate_document(doc) -> List[str]:
 
 
 def validate_file(path: str) -> List[str]:
-    """Validate a BENCH_kernels.json document or a BENCH_JSON row stream
-    (one JSON object per line; blank and '#' lines are ignored)."""
+    """Validate a BENCH_kernels.json document, a BENCH_history.jsonl
+    trajectory (one gate *document* per line), or a BENCH_JSON row stream
+    (one row object per line; blank and '#' lines are ignored). History
+    and row lines may be mixed — each line is dispatched on the presence
+    of a ``schema`` field."""
     with open(path) as f:
         text = f.read()
     try:
@@ -175,10 +215,76 @@ def validate_file(path: str) -> List[str]:
             errors.append(f"{path}:{ln_no}: not JSON ({e})")
             continue
         rows += 1
-        errors.extend(validate_row(obj, ctx=f"{path}:{ln_no}"))
+        if isinstance(obj, dict) and "schema" in obj:
+            errors.extend(f"{path}:{ln_no}: {e}"
+                          for e in validate_gate_document(obj))
+        else:
+            errors.extend(validate_row(obj, ctx=f"{path}:{ln_no}"))
     if rows == 0:
         errors.append(f"{path}: no benchmark rows found")
     return errors
+
+
+# ------------------------- trajectory gating ------------------------------ #
+
+def row_key(row: dict):
+    """The identity a perf trajectory tracks: what ran and where, never
+    how fast. Lattice size / MCS / trial counts are deliberately NOT part
+    of the key — those change with sweep sizing, and the smoke guard in
+    ``compare_documents`` keeps apples with apples."""
+    return (row.get("family"), row.get("scenario"),
+            row.get("local_kernel"), row.get("backend"))
+
+
+def compare_documents(candidate: dict, baseline: dict,
+                      threshold: float) -> List[str]:
+    """Regression diff of two gate documents; returns human-readable
+    failures (empty = gate passes).
+
+    A matching ``(family, scenario, local_kernel, backend)`` row regresses
+    when ``candidate.updates_per_s < baseline.updates_per_s * (1 -
+    threshold)``. Documents with different ``smoke`` flags are
+    incomparable (different sweep sizes) and compare clean with a note;
+    an invalid baseline fails loudly — a gate diffing against garbage
+    would silently pass forever."""
+    if not 0.0 < threshold < 1.0:
+        return [f"regression threshold must be in (0, 1), got {threshold}"]
+    base_errors = validate_gate_document(baseline)
+    if base_errors:
+        return [f"baseline invalid: {e}" for e in base_errors]
+    if bool(candidate.get("smoke")) != bool(baseline.get("smoke")):
+        print("# compare: smoke flags differ (candidate "
+              f"{candidate.get('smoke')} vs baseline "
+              f"{baseline.get('smoke')}) — sweeps incomparable, skipping",
+              file=sys.stderr)
+        return []
+    base_rows = {row_key(r): r for r in baseline["rows"]}
+    failures: List[str] = []
+    matched = 0
+    for row in candidate.get("rows", []):
+        base = base_rows.get(row_key(row))
+        if base is None:
+            continue
+        matched += 1
+        floor = base["updates_per_s"] * (1.0 - threshold)
+        if row["updates_per_s"] < floor:
+            failures.append(
+                f"{row['name']}: {row['updates_per_s']:.1f} upd/s < "
+                f"{floor:.1f} (baseline {base['updates_per_s']:.1f}, "
+                f"threshold {threshold:.0%})")
+    if matched == 0:
+        failures.append(
+            "no candidate row matches any baseline (family, scenario, "
+            "local_kernel, backend) key — the gate compared nothing")
+    return failures
+
+
+def append_history(doc: dict, path: str) -> None:
+    """Append the full gate document as one JSONL line — the perf
+    trajectory artifact (validated by ``validate_file``; CI uploads it
+    every perf-smoke run)."""
+    with open(path, "a") as f:
+        f.write(json.dumps(doc, separators=(",", ":")) + "\n")
 
 
 # -------------------------------- sweep ----------------------------------- #
@@ -206,15 +312,23 @@ def _gate_config(family: str, kernel: str, scenario: str):
 
 def _bench_combo(family: str, kernel: str, scenario: str, mcs: int,
                  trials: int) -> dict:
-    """Median time of one jitted chunk (compile excluded, like fig4_3):
-    a simulate() chunk for the one-lattice families, a run_trials chunk
-    for the composed family."""
+    """Per-call timing stats of one jitted chunk (compile excluded, like
+    fig4_3): a simulate() chunk for the one-lattice families, a
+    run_trials chunk for the composed family.
+
+    Throughput normalization (the v2 bug this schema fixes): the
+    composed family pads the trial batch to the pod width, so the kernel
+    *runs* ``n_pad`` lattices — but ``updates_per_s`` counts only the
+    ``n_trials`` REQUESTED lattices. Normalizing over padding made the
+    same workload look faster on wider pods (free throughput from wasted
+    work); both counts now land in the row so either view is
+    recoverable."""
     import jax
     import jax.numpy as jnp
 
     from repro.core import engines
     from repro.core.lattice import init_grid
-    from .common import time_fn
+    from .common import time_stats
 
     p, sc = _gate_config(family, kernel, scenario)
     dom = jnp.asarray(sc.dominance(), jnp.float32)
@@ -222,16 +336,15 @@ def _bench_combo(family: str, kernel: str, scenario: str, mcs: int,
     if family == "sharded_pod":
         from repro.core.trials import (build_trial_chunk, pad_trials,
                                        trial_grids_and_keys)
-        n_pad = pad_trials(trials, built.pod_width)
+        n_trials = trials
+        n_pad = pad_trials(n_trials, built.pod_width)
         grids, keys = trial_grids_and_keys(
             p, jax.random.PRNGKey(0), n_pad, sharding=built.key_sharding,
             grid_sharding=built.batch_sharding)
         chunk = build_trial_chunk(p, dom, built=built)
-        t = time_fn(lambda: chunk(grids, keys, mcs), warmup=1, iters=2)
-        n_upd = mcs * p.n_cells * n_pad
-        trials = n_pad          # report what actually ran: the padded
-                                # batch is the throughput base, and it
-                                # varies with the pod width across runners
+        stats = time_stats(lambda: chunk(grids, keys, mcs),
+                           warmup=1, iters=3)
+        n_upd = mcs * p.n_cells * n_trials
     else:
         from repro.core.simulation import build_chunk_fn
         chunk = build_chunk_fn(p, dom, one_mcs=built.one_mcs)
@@ -239,24 +352,28 @@ def _bench_combo(family: str, kernel: str, scenario: str, mcs: int,
                          p.species, p.empty)
         if built.grid_sharding is not None:
             grid = jax.device_put(grid, built.grid_sharding)
-        t = time_fn(lambda: chunk(grid, jax.random.PRNGKey(1), mcs),
-                    warmup=1, iters=2)
+        stats = time_stats(lambda: chunk(grid, jax.random.PRNGKey(1), mcs),
+                           warmup=1, iters=3)
         n_upd = mcs * p.n_cells
-        trials = 0
+        n_trials = n_pad = 0
+    t = stats["median_us"] / 1e6
     upd_s = n_upd / t
     return {
         "name": f"kernelgate_{scenario}_{family}_{kernel}",
-        "us_per_call": round(t * 1e6, 1),
+        "us_per_call": stats["median_us"],
         "derived": f"{upd_s / 1e6:.3f} Mupd/s engine={p.engine} "
                    f"scenario={scenario}",
         "family": family,
         "scenario": scenario,
         "local_kernel": kernel,
         "engine": p.engine,
+        "backend": jax.default_backend(),
         "lattice": [p.height, p.length],
         "mcs": mcs,
-        "trials": trials,
+        "n_trials": n_trials,
+        "n_pad": n_pad,
         "updates_per_s": round(upd_s, 1),
+        "timing": stats,
     }
 
 
@@ -284,6 +401,7 @@ def run(out_path: Optional[str] = None) -> dict:
         "backend": jax.default_backend(),
         "devices": len(jax.devices()),
         "smoke": bool(SMOKE),
+        "unix_time": int(time.time()),
         "rows": rows,
     }
     errors = validate_gate_document(doc)
@@ -304,8 +422,24 @@ def main() -> None:
                     help="write the BENCH_kernels.json artifact here "
                          "(default: $BENCH_GATE_OUT, or no file)")
     ap.add_argument("--validate", nargs="+", metavar="FILE", default=None,
-                    help="validate BENCH_kernels.json documents and/or "
+                    help="validate BENCH_kernels.json documents, "
+                         "BENCH_history.jsonl trajectories and/or "
                          "BENCH_JSON row streams instead of benchmarking")
+    ap.add_argument("--compare", metavar="BASELINE", default=None,
+                    help="diff the sweep against this committed gate "
+                         "document; exit non-zero on any matching-row "
+                         "updates_per_s regression beyond the threshold")
+    ap.add_argument("--candidate", metavar="FILE", default=None,
+                    help="with --compare: read the candidate document "
+                         "from FILE instead of re-running the sweep")
+    ap.add_argument("--regressionThreshold", dest="regression_threshold",
+                    type=float, default=0.5,
+                    help="fractional updates_per_s drop that fails the "
+                         "gate (default 0.5 = fail below half the "
+                         "baseline; CI passes 0.75)")
+    ap.add_argument("--history", metavar="FILE", default=None,
+                    help="append the gate document to this "
+                         "BENCH_history.jsonl perf trajectory")
     args = ap.parse_args()
     if args.validate:
         all_errors = []
@@ -317,7 +451,39 @@ def main() -> None:
         print(f"# {len(args.validate)} file(s) schema-valid",
               file=sys.stderr)
         return
-    run(out_path=args.out)
+    # read the baseline BEFORE the sweep runs, so `--out X --compare X`
+    # means "diff this run against the committed snapshot, then refresh
+    # it" — the natural CI invocation — instead of a vacuous self-compare
+    baseline = None
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+    if args.candidate:
+        if not args.compare:
+            ap.error("--candidate requires --compare")
+        with open(args.candidate) as f:
+            doc = json.load(f)
+        errors = validate_gate_document(doc)
+        if errors:
+            print("\n".join(f"candidate invalid: {e}" for e in errors),
+                  file=sys.stderr)
+            raise SystemExit(1)
+    else:
+        doc = run(out_path=args.out)
+    # artifacts land BEFORE the gate can fail: a regressed run must still
+    # leave its evidence on disk / in the uploaded trajectory
+    if args.history:
+        append_history(doc, args.history)
+        print(f"# trajectory entry -> {args.history}", file=sys.stderr)
+    if args.compare:
+        failures = compare_documents(doc, baseline,
+                                     args.regression_threshold)
+        if failures:
+            print("PERF GATE FAILED vs " + args.compare, file=sys.stderr)
+            print("\n".join(failures), file=sys.stderr)
+            raise SystemExit(1)
+        print(f"# perf gate clean vs {args.compare} (threshold "
+              f"{args.regression_threshold:.0%})", file=sys.stderr)
 
 
 if __name__ == "__main__":

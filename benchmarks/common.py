@@ -26,9 +26,25 @@ def smoke(small, full):
     return small if SMOKE else full
 
 
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
-            **kw) -> float:
-    """Median wall time of fn(*args) in seconds (block_until_ready)."""
+def median(xs) -> float:
+    """True median: mean of the two middle elements for even-length
+    samples. The old ``sorted[n // 2]`` shortcut silently returned the
+    MAX of a 2-sample run (the exact shape bench_gate uses), biasing
+    every gated number pessimistic by the full run-to-run jitter."""
+    if not xs:
+        raise ValueError("median of empty sample")
+    s = sorted(xs)
+    n = len(s)
+    if n % 2:
+        return s[n // 2]
+    return (s[n // 2 - 1] + s[n // 2]) / 2.0
+
+
+def time_stats(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+               **kw) -> dict:
+    """Per-call timing stats of fn(*args) in MICROseconds
+    (block_until_ready): ``{"median_us", "mean_us", "min_us", "max_us",
+    "n"}`` — the v3 bench-gate row payload."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args, **kw))
     times = []
@@ -36,8 +52,20 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args, **kw))
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+    return {
+        "median_us": round(median(times) * 1e6, 1),
+        "mean_us": round(sum(times) / len(times) * 1e6, 1),
+        "min_us": round(min(times) * 1e6, 1),
+        "max_us": round(max(times) * 1e6, 1),
+        "n": len(times),
+    }
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Median wall time of fn(*args) in seconds (block_until_ready)."""
+    stats = time_stats(fn, *args, warmup=warmup, iters=iters, **kw)
+    return stats["median_us"] / 1e6
 
 
 def emit(name: str, seconds: float, derived: str = "") -> None:

@@ -51,6 +51,17 @@ class BuiltEngine(NamedTuple):
     batch_sharding: Optional[jax.sharding.Sharding] = None
     key_sharding: Optional[jax.sharding.Sharding] = None
     pod_width: int = 1
+    # k_mcs megakernel entry points (DESIGN.md §6). ``multi_mcs(grid, key,
+    # k_steps)`` advances K Monte-Carlo steps in one launch and returns
+    # (grid, key', counts, kept, attempts) with counts (K, species+1) —
+    # the per-MCS density stream the drivers would otherwise compute one
+    # metrics.counts at a time. k_steps is static at trace time. The key
+    # is split INSIDE exactly like K driver-level one_mcs calls would, so
+    # trajectories stay bit-identical to k_mcs=1. ``multi_mcs_batch`` is
+    # the composed-mesh analog over a trial batch: (grids, keys, k_steps)
+    # -> (grids, keys', counts (n, K, species+1), kept (n,), att (n,)).
+    multi_mcs: Optional[Callable] = None
+    multi_mcs_batch: Optional[Callable] = None
 
 
 @dataclass(frozen=True)
@@ -73,6 +84,11 @@ class EngineCaps:
     local_kernels: Tuple[str, ...] = ()  # values of params.local_kernel the
                                # engine accepts ('jnp', 'pallas', 'fused');
                                # empty = the knob is ignored
+    multi_mcs: bool = False    # supports params.k_mcs > 1 (the grid-
+                               # resident multi-MCS megakernel, DESIGN.md
+                               # §6); only meaningful for the fused-Philox
+                               # family — its in-kernel counter schedule
+                               # is what makes K steps per launch possible
     equiv_oracle: Optional[str] = None  # engine this one is bit-identical
                                # to at the one_mcs level (same key -> same
                                # trajectory); drives the registry-wide
@@ -185,6 +201,21 @@ def validate_params(p: "EscgParams") -> None:
         raise ValueError(
             f"engine {p.engine!r} supports local_kernel in "
             f"{spec.caps.local_kernels}, got {p.local_kernel!r}")
+    if p.k_mcs < 1:
+        raise ValueError(f"k_mcs must be >= 1, got {p.k_mcs}")
+    if p.k_mcs > 1:
+        if not spec.caps.multi_mcs:
+            raise ValueError(
+                f"engine {p.engine!r} does not support k_mcs > 1 (the "
+                "multi-MCS megakernel belongs to the fused-Philox family: "
+                "pallas_fused, or sharded/sharded_pod with "
+                "local_kernel='fused')")
+        if spec.caps.local_kernels and p.local_kernel != "fused":
+            raise ValueError(
+                f"k_mcs > 1 requires local_kernel='fused' on engine "
+                f"{p.engine!r} (got {p.local_kernel!r}): only the "
+                "in-kernel Philox schedule can thread K MCS through one "
+                "launch")
     if p.mesh_shape is not None:
         if not spec.caps.pod_composable:
             raise ValueError(
@@ -247,6 +278,27 @@ def fused_round_inputs(key: jax.Array, th: int, tw: int):
     seed = jax.random.key_data(key).astype(jnp.uint32)[-2:]
     shift = round_shift(jax.random.fold_in(key, 1), th, tw)
     return seed, shift
+
+
+def multi_round_inputs(key: jax.Array, th: int, tw: int, k_steps: int):
+    """The K-step fused schedule: ``(key', seeds (K, 2), shifts (K, 2))``.
+
+    Replays EXACTLY the driver's per-MCS key chain — ``key, k1 =
+    split(key); fused_round_inputs(k1, ...)`` K times — so a megakernel
+    consuming (seeds[t], shifts[t]) at step t is bit-identical to K
+    driver-level ``one_mcs`` calls, and the returned key equals the
+    driver's key after K MCS (the k_mcs=1 / k_mcs=K equivalence contract).
+    ``k_steps`` is a static Python int (one trace per distinct K)."""
+    seeds, shifts = [], []
+    for _ in range(k_steps):
+        key, k1 = jax.random.split(key)
+        seed, shift = fused_round_inputs(k1, th, tw)
+        seeds.append(seed)
+        shifts.append(shift)
+    if not seeds:
+        return key, jnp.zeros((0, 2), jnp.uint32), jnp.zeros((0, 2),
+                                                             jnp.int32)
+    return key, jnp.stack(seeds), jnp.stack(shifts)
 
 
 @register("reference", EngineCaps(
@@ -337,7 +389,7 @@ def _build_pallas(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
 
 
 @register("pallas_fused", EngineCaps(
-    flux_only=True, tiled=True,
+    flux_only=True, tiled=True, multi_mcs=True,
     description="Pallas kernel with in-kernel Philox proposal derivation "
                 "(zero proposal HBM traffic)",
     paper="numRandoms buffer §3.2.1 eliminated (Fig 4.2)"))
@@ -354,13 +406,24 @@ def _build_pallas_fused(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
             t_eps, t_eps_mu, p.neighbourhood, roll_back=False)
         attempts = jnp.int32(n_tiles * k_per_tile)
         return grid, attempts, attempts
-    return BuiltEngine(one_mcs)
+
+    def multi_mcs(grid, key, k_steps):
+        # K MCS per launch: the megakernel consumes the K-step schedule
+        # and banks per-step species counts in-kernel
+        key, seeds, shifts = multi_round_inputs(key, th, tw, k_steps)
+        grid, counts = kernel_ops.escg_rounds_fused(
+            grid, seeds, shifts, dom, p.tile, k_per_tile, t_eps, t_eps_mu,
+            p.species, p.neighbourhood)
+        attempts = jnp.int32(k_steps * n_tiles * k_per_tile)
+        return grid, key, counts, attempts, attempts
+    return BuiltEngine(one_mcs, multi_mcs=multi_mcs)
 
 
 @register("sharded", EngineCaps(
     flux_only=True, tiled=True, multi_device=True, vmappable=False,
     trial_shardable=False, mesh_axes=("rows", "cols"),
-    local_kernels=("jnp", "pallas", "fused"), equiv_oracle="sublattice",
+    local_kernels=("jnp", "pallas", "fused"), multi_mcs=True,
+    equiv_oracle="sublattice",
     equiv_oracles=(("fused", "pallas_fused"),),
     description="domain-decomposed across devices: shard_map + ppermute "
                 "halo exchange, per-tile Philox streams, psum stasis counts",
@@ -373,7 +436,8 @@ def _build_sharded(p: "EscgParams", dom: jax.Array) -> BuiltEngine:
 @register("sharded_pod", EngineCaps(
     flux_only=True, tiled=True, multi_device=True, vmappable=False,
     trial_shardable=False, mesh_axes=("pod", "rows", "cols"),
-    local_kernels=("jnp", "pallas", "fused"), equiv_oracle="sublattice",
+    local_kernels=("jnp", "pallas", "fused"), multi_mcs=True,
+    equiv_oracle="sublattice",
     equiv_oracles=(("fused", "pallas_fused"),),
     description="composed trial x grid mesh: IID trials sharded over "
                 "'pod', each lattice halo-exchanged over ('rows','cols'); "

@@ -71,6 +71,12 @@ class EscgParams:
     # (in-kernel Philox proposal derivation keyed by global tile identity
     # — zero proposal HBM traffic, bit-identical to engine='pallas_fused')
     local_kernel: str = "jnp"
+    # Monte-Carlo steps per kernel launch (the multi-MCS megakernel,
+    # DESIGN.md §6): k_mcs > 1 runs K steps grid-resident per pallas_call,
+    # amortizing launch overhead and HBM round-trips K×. Fused-Philox
+    # family only (engine pallas_fused, or sharded/sharded_pod with
+    # local_kernel='fused'); bit-identical to k_mcs=1 by construction.
+    k_mcs: int = 1
 
     # ------------------------------------------------------------------ #
     @property
@@ -215,6 +221,10 @@ def add_cli_args(p: argparse.ArgumentParser) -> None:
                         "proposals in-kernel from Philox counters (zero "
                         "proposal HBM traffic, bit-identical to "
                         "--engine pallas_fused)")
+    p.add_argument("--kMcs", dest="k_mcs", type=int, default=1,
+                   help="Monte-Carlo steps fused into one kernel launch "
+                        "(the multi-MCS megakernel; fused-Philox engines "
+                        "only, bit-identical to --kMcs 1)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--chunkMcs", dest="chunk_mcs", type=int, default=100)
     p.add_argument("--outDir", dest="out_dir", type=str, default="escg_out")

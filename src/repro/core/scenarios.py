@@ -158,6 +158,9 @@ class EngineConfig:
     shard_grid: Optional[Tuple[int, int]] = None
     mesh_shape: Optional[Tuple[int, int, int]] = None
     local_kernel: str = "jnp"
+    # MCS fused per kernel launch (multi-MCS megakernel; fused-Philox
+    # engines only — see EscgParams.k_mcs)
+    k_mcs: int = 1
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -340,7 +343,7 @@ def compose(scenario: Scenario, engine: Optional[EngineConfig] = None,
         cell_dtype=engine.cell_dtype, tile=engine.tile, seed=run.seed,
         chunk_mcs=run.chunk_mcs, out_dir=run.out_dir,
         shard_grid=engine.shard_grid, mesh_shape=engine.mesh_shape,
-        local_kernel=engine.local_kernel).validate()
+        local_kernel=engine.local_kernel, k_mcs=engine.k_mcs).validate()
 
 
 def decompose(params: EscgParams, name: str = ""
@@ -355,7 +358,8 @@ def decompose(params: EscgParams, name: str = ""
     eng = EngineConfig(
         engine=params.engine, cell_dtype=params.cell_dtype,
         tile=params.tile, shard_grid=params.shard_grid,
-        mesh_shape=params.mesh_shape, local_kernel=params.local_kernel)
+        mesh_shape=params.mesh_shape, local_kernel=params.local_kernel,
+        k_mcs=params.k_mcs)
     run = RunConfig(
         length=params.length, height=params.height, mcs=params.mcs,
         chunk_mcs=params.chunk_mcs, seed=params.seed,

@@ -41,7 +41,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .engines import BuiltEngine, _tiled_setup, fused_round_inputs
+from .engines import (BuiltEngine, _tiled_setup, fused_round_inputs,
+                      multi_round_inputs)
 from .lattice import DIRS
 from .rng import ProposalBatch, round_shift, tile_stream_batch
 from .sublattice import from_tiles, tile_update, to_tiles
@@ -180,13 +181,15 @@ def make_local_round(p, dom, shard_grid: Tuple[int, int],
     t_eps, t_eps_mu = p.action_thresholds()
     th, tw, _, k_per, interior = _tiled_setup(p)
     gw = p.length // tw
-    dom_j = jnp.asarray(dom, jnp.float32)
     dr, dc = shard_grid
+    # NOTE: jnp constants (dom, DIRS) are created inside the returned
+    # closures, not here — this factory may run lazily under an outer jit
+    # trace (the k_mcs shard_map cache), and a constant captured from one
+    # trace leaks into the next (UnexpectedTracerError).
 
     if p.local_kernel == "fused":
         from ..kernels import escg_update_fused, ops as kernel_ops  # lazy
         interp = kernel_ops._default_interpret(None)
-        dirs = jnp.asarray(DIRS, jnp.int32)
 
         def local_round(gl, seed, shift):
             gl = shard_shift2d(gl, shift, (th, tw), (dr, dc), row_axis,
@@ -195,7 +198,8 @@ def make_local_round(p, dom, shard_grid: Tuple[int, int],
             off = jnp.stack([lax.axis_index(row_axis) * lgh,
                              lax.axis_index(col_axis) * lgw])
             return escg_update_fused.escg_tile_round_fused(
-                gl, seed, jnp.uint32(0), dom_j, dirs, (th, tw), k_per,
+                gl, seed, jnp.uint32(0), jnp.asarray(dom, jnp.float32),
+                jnp.asarray(DIRS, jnp.int32), (th, tw), k_per,
                 t_eps, t_eps_mu, p.neighbourhood, interpret=interp,
                 tile_offset=off, grid_tiles_w=gw)
         return local_round
@@ -204,9 +208,67 @@ def make_local_round(p, dom, shard_grid: Tuple[int, int],
         gl = shard_shift2d(gl, shift, (th, tw), (dr, dc), row_axis, col_axis)
         tids = _local_tile_ids(gl.shape, (th, tw), gw, row_axis, col_axis)
         props = tile_stream_batch(kp, tids, k_per, interior, p.neighbourhood)
-        return _update_tiles(gl, props, (th, tw), t_eps, t_eps_mu, dom_j,
+        return _update_tiles(gl, props, (th, tw), t_eps, t_eps_mu,
+                             jnp.asarray(dom, jnp.float32),
                              local_kernel=p.local_kernel)
     return local_round
+
+
+def make_local_multi_round(p, dom, shard_grid: Tuple[int, int],
+                           k_steps: int, row_axis: str = "rows",
+                           col_axis: str = "cols"):
+    """``local_multi(gl, seeds (K, 2), shifts (K, 2)) -> (gl, counts)``
+    — K fused MCS of one device-block inside the shard_map region, with
+    GLOBAL per-step species counts (K, species + 1) banked alongside (the
+    per-MCS density stream the drivers need for stasis detection).
+
+    Two shapes, one contract (bit-identical to K ``local_round`` calls):
+
+    * ``shard_grid == (1, 1)`` (every pod slice of sharded_pod, and
+      sharded on one device): the whole lattice is block-resident, so the
+      TRUE megakernel runs — K shift/sweep/count cycles in ONE
+      ``pallas_call``, in-kernel torus roll, zero HBM round-trips between
+      steps. Counts come out of the kernel already global.
+    * multi-shard: the halo exchange is a cross-device collective that
+      cannot live inside a ``pallas_call``, so K single-round kernels run
+      back-to-back inside ONE shard_map region (launch overhead still
+      amortized K× at the jit level); per-shard partial counts are
+      ``psum``med into global ones.
+    """
+    t_eps, t_eps_mu = p.action_thresholds()
+    th, tw, _, k_per, _ = _tiled_setup(p)
+    gw = p.length // tw
+    dr, dc = shard_grid
+    from ..kernels import escg_update_fused, ops as kernel_ops  # lazy
+    escg_update_fused.check_counter_capacity(
+        (p.height // th) * (p.length // tw), k_per)
+    interp = kernel_ops._default_interpret(None)
+    n_counts = p.species + 1
+    # trace safety: this factory runs lazily under the drivers' jitted
+    # chunks (the per-k_steps shard_map cache), so jnp constants must be
+    # created inside local_multi — see make_local_round
+
+    if dr == dc == 1:
+        def local_multi(gl, seeds, shifts):
+            return escg_update_fused.escg_tile_rounds_fused(
+                gl, seeds, shifts, jnp.asarray(dom, jnp.float32),
+                jnp.asarray(DIRS, jnp.int32), (th, tw), k_per, t_eps,
+                t_eps_mu, p.species, p.neighbourhood, interpret=interp,
+                grid_tiles_w=gw)
+        return local_multi
+
+    single = make_local_round(p, dom, shard_grid, row_axis, col_axis)
+
+    def local_multi(gl, seeds, shifts):
+        counts = []
+        for t in range(k_steps):        # static: K kernels, one region
+            gl = single(gl, seeds[t], shifts[t])
+            gi = gl.astype(jnp.int32)
+            counts.append(jnp.stack([jnp.sum((gi == s).astype(jnp.int32))
+                                     for s in range(n_counts)]))
+        cnts = lax.psum(jnp.stack(counts), (row_axis, col_axis))
+        return gl, cnts
+    return local_multi
 
 
 def build_engine(params, dom: jax.Array,
@@ -248,8 +310,30 @@ def build_engine(params, dom: jax.Array,
         attempts = jnp.int32(n_tiles * k_per)
         return grid, attempts, attempts
 
+    multi_mcs = None
+    if p.local_kernel == "fused":
+        # k_mcs megakernel path: one shard_map region per K-step group,
+        # cached per distinct K (the driver only uses K and the remainder)
+        multi_fns = {}
+
+        def _multi_fn(k_steps: int):
+            if k_steps not in multi_fns:
+                local_multi = make_local_multi_round(
+                    p, dom, (dr, dc), k_steps, row_axis, col_axis)
+                multi_fns[k_steps] = shard_map(
+                    local_multi, mesh=mesh,
+                    in_specs=(grid_spec, P(), P()),
+                    out_specs=(grid_spec, P()), check_rep=False)
+            return multi_fns[k_steps]
+
+        def multi_mcs(grid, key, k_steps):
+            key, seeds, shifts = multi_round_inputs(key, th, tw, k_steps)
+            grid, counts = _multi_fn(k_steps)(grid, seeds, shifts)
+            attempts = jnp.int32(k_steps * n_tiles * k_per)
+            return grid, key, counts, attempts, attempts
+
     return BuiltEngine(one_mcs, grid_sharding=lattice_sharding(
-        mesh, row_axis, col_axis))
+        mesh, row_axis, col_axis), multi_mcs=multi_mcs)
 
 
 # --------------------- explicit-proposal round (tests) -------------------- #

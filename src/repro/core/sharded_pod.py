@@ -44,9 +44,9 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .engines import BuiltEngine, _tiled_setup
+from .engines import BuiltEngine, _tiled_setup, multi_round_inputs
 from .sharded import (build_engine as build_grid_engine, make_local_round,
-                      round_stream_inputs)
+                      make_local_multi_round, round_stream_inputs)
 
 POD_AXIS, ROW_AXIS, COL_AXIS = "pod", "rows", "cols"
 
@@ -107,6 +107,36 @@ def build_engine(params, dom: jax.Array,
         att = jnp.full((grids.shape[0],), n_tiles * k_per, jnp.int32)
         return grids, att, att
 
+    multi_mcs_batch = None
+    if p.local_kernel == "fused":
+        # k_mcs megakernel over the composed mesh: the per-block K-step
+        # local multi-round (core.sharded.make_local_multi_round — the
+        # TRUE megakernel when (dr, dc) == (1, 1)) vmapped over each pod
+        # group's trial slice; per-step counts come back per trial
+        multi_fns = {}
+
+        def _multi_fn(k_steps: int):
+            if k_steps not in multi_fns:
+                local_multi = make_local_multi_round(
+                    p, dom, (dr, dc), k_steps, ROW_AXIS, COL_AXIS)
+                multi_fns[k_steps] = shard_map(
+                    lambda gs, seeds, shifts:
+                        jax.vmap(local_multi)(gs, seeds, shifts),
+                    mesh=mesh, in_specs=(batch_spec, pod_spec, pod_spec),
+                    out_specs=(batch_spec, pod_spec), check_rep=False)
+            return multi_fns[k_steps]
+
+        def multi_mcs_batch(grids, keys, k_steps):
+            """K MCS for every trial in one region: per-trial K-step fused
+            schedules (bit-identical key chain to K one_mcs_batch calls),
+            counts (n, K, species + 1)."""
+            keys, seeds, shifts = jax.vmap(
+                lambda k: multi_round_inputs(k, th, tw, k_steps))(keys)
+            grids, counts = _multi_fn(k_steps)(grids, seeds, shifts)
+            att = jnp.full((grids.shape[0],), k_steps * n_tiles * k_per,
+                           jnp.int32)
+            return grids, keys, counts, att, att
+
     return BuiltEngine(
         one_mcs=sub.one_mcs,
         grid_sharding=sub.grid_sharding,
@@ -114,4 +144,6 @@ def build_engine(params, dom: jax.Array,
         batch_sharding=NamedSharding(mesh, batch_spec),
         key_sharding=NamedSharding(mesh, pod_spec),
         pod_width=pw,
+        multi_mcs=sub.multi_mcs,
+        multi_mcs_batch=multi_mcs_batch,
     )

@@ -45,12 +45,50 @@ def build_mcs_fn(params: EscgParams, dom: jax.Array):
 
 
 def build_chunk_fn(params: EscgParams, dom: jax.Array,
-                   one_mcs: Optional[Callable] = None):
+                   one_mcs: Optional[Callable] = None, built=None):
     """chunk(grid, key, n_mcs<static>) -> (grid, key, counts[n,S+1], kept,
-    attempts); jit-compiled, fully device-resident."""
+    attempts); jit-compiled, fully device-resident.
+
+    With ``params.k_mcs > 1`` (and a ``built`` engine providing
+    ``multi_mcs``) the chunk runs in K-step megakernel groups — a scan of
+    ``n_mcs // K`` multi-MCS launches plus one remainder launch — instead
+    of one launch per MCS. Counts, key chain and trajectory are
+    bit-identical to the per-MCS path (the k_mcs contract)."""
+    if built is None and (one_mcs is None or params.k_mcs > 1):
+        built = engines.build(params, dom)
     if one_mcs is None:
-        one_mcs = build_mcs_fn(params, dom)
+        one_mcs = built.one_mcs
     s = params.species
+
+    if params.k_mcs > 1:
+        multi = built.multi_mcs
+        assert multi is not None, \
+            f"engine {params.engine!r} validated k_mcs>1 but built no " \
+            "multi_mcs"
+        k_group = params.k_mcs
+
+        @partial(jax.jit, static_argnames=("n_mcs",))
+        def chunk(grid, key, n_mcs: int):
+            q, r = divmod(n_mcs, k_group)
+            kept, att = jnp.int32(0), jnp.int32(0)
+            parts = []
+            if q:
+                def body(carry, _):
+                    g, k, kept, att = carry
+                    g, k, cnts, k2, a2 = multi(g, k, k_group)
+                    return (g, k, kept + k2, att + a2), cnts
+                (grid, key, kept, att), cnts_q = jax.lax.scan(
+                    body, (grid, key, kept, att), length=q)
+                parts.append(cnts_q.reshape(q * k_group, s + 1))
+            if r:
+                grid, key, cnts_r, k2, a2 = multi(grid, key, r)
+                kept, att = kept + k2, att + a2
+                parts.append(cnts_r)
+            cnts = (jnp.concatenate(parts, axis=0) if parts
+                    else jnp.zeros((0, s + 1), jnp.int32))
+            return grid, key, cnts, kept, att
+
+        return chunk
 
     @partial(jax.jit, static_argnames=("n_mcs",))
     def chunk(grid, key, n_mcs: int):
@@ -110,7 +148,7 @@ def simulate(params: EscgParams,
     eng = engines.build(p, dom_j)
     if eng.grid_sharding is not None:
         grid = jax.device_put(grid, eng.grid_sharding)
-    chunk_fn = build_chunk_fn(p, dom_j, one_mcs=eng.one_mcs)
+    chunk_fn = build_chunk_fn(p, dom_j, built=eng)
     n = p.n_cells
     hist = [np.asarray(metrics.counts(grid, p.species))]
     mcs_done, stasis_mcs = 0, -1

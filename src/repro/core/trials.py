@@ -213,9 +213,43 @@ def build_trial_chunk(p: EscgParams, dom: jax.Array,
     trial), so they are bit-identical for any engine pair whose one-MCS
     functions are.
     """
+    s = p.species
     if built is not None and built.one_mcs_batch is not None:
+        if p.k_mcs > 1:
+            multi_batch = built.multi_mcs_batch
+            assert multi_batch is not None, \
+                f"engine {p.engine!r} validated k_mcs>1 but built no " \
+                "multi_mcs_batch"
+            k_group = p.k_mcs
+
+            @partial(jax.jit, static_argnames=("n_mcs",))
+            def chunk_batch(grids, keys, n_mcs: int):
+                n = grids.shape[0]
+                q, r = divmod(n_mcs, k_group)
+                kept = att = jnp.zeros((n,), jnp.int32)
+                parts = []
+                if q:
+                    def body(carry, _):
+                        g, k, kept, att = carry
+                        g, k, cnts, k2, a2 = multi_batch(g, k, k_group)
+                        return (g, k, kept + k2, att + a2), cnts
+                    (grids, keys, kept, att), cnts_q = jax.lax.scan(
+                        body, (grids, keys, kept, att), length=q)
+                    # (q, n, K, S + 1) -> (n, q * K, S + 1)
+                    parts.append(jnp.moveaxis(cnts_q, 0, 1).reshape(
+                        n, q * k_group, s + 1))
+                if r:
+                    grids, keys, cnts_r, k2, a2 = multi_batch(grids, keys,
+                                                              r)
+                    kept, att = kept + k2, att + a2
+                    parts.append(cnts_r)
+                cnts = jnp.concatenate(parts, axis=1)
+                return (grids, keys, cnts[:, -1], cnts[:, :, 1:] > 0,
+                        kept, att)
+
+            return chunk_batch
+
         one_mcs_batch = built.one_mcs_batch
-        s = p.species
 
         @partial(jax.jit, static_argnames=("n_mcs",))
         def chunk_batch(grids, keys, n_mcs: int):
@@ -235,10 +269,42 @@ def build_trial_chunk(p: EscgParams, dom: jax.Array,
 
         return chunk_batch
 
+    if one_mcs is None and (built is None and p.k_mcs > 1):
+        built = engines.build(p, dom)
     if one_mcs is None:
         one_mcs = (built.one_mcs if built is not None
                    else engines.build(p, dom).one_mcs)
-    s = p.species
+    multi = (built.multi_mcs
+             if built is not None and p.k_mcs > 1 else None)
+
+    if p.k_mcs > 1:
+        assert multi is not None, \
+            f"engine {p.engine!r} validated k_mcs>1 but built no multi_mcs"
+        k_group = p.k_mcs
+
+        @partial(jax.jit, static_argnames=("n_mcs",))
+        def chunk(grids, keys, n_mcs: int):
+            def one(grid, key):
+                q, r = divmod(n_mcs, k_group)
+                kept = att = jnp.int32(0)
+                parts = []
+                if q:
+                    def body(carry, _):
+                        g, k, kept, att = carry
+                        g, k, cnts, k2, a2 = multi(g, k, k_group)
+                        return (g, k, kept + k2, att + a2), cnts
+                    (grid, key, kept, att), cnts_q = jax.lax.scan(
+                        body, (grid, key, kept, att), length=q)
+                    parts.append(cnts_q.reshape(q * k_group, s + 1))
+                if r:
+                    grid, key, cnts_r, k2, a2 = multi(grid, key, r)
+                    kept, att = kept + k2, att + a2
+                    parts.append(cnts_r)
+                cnts = jnp.concatenate(parts, axis=0)
+                return grid, key, cnts[-1], cnts[:, 1:] > 0, kept, att
+            return jax.vmap(one)(grids, keys)
+
+        return chunk
 
     @partial(jax.jit, static_argnames=("n_mcs",))
     def chunk(grids, keys, n_mcs: int):

@@ -10,8 +10,12 @@ remains is the grid itself.
 Counter layout (``kernels.philox.philox_proposal_fields``): c0 = global
 tile_id * K + j (proposal index), c1 = round index, c2 = c3 = 0; key = two
 words derived from the simulation PRNG key per MCS. Uniform ints via
-modulus (the paper's own technique, §3.2.1 — the bias at 32 bits is
-< 2^-22 for any lattice tile).
+modulus (the paper's own technique, §3.2.1): for a 32-bit word reduced
+mod m the bias is at most m / 2^32, i.e. max(interior, nbhd) / 2^32 here
+— e.g. < 2^-25 for the default 8x16 tile (interior 84), and < 2^-22 only
+while interior < 2^10. ``check_counter_capacity`` guards the other edge:
+c0 = tile_id * K + j must not wrap uint32, or distant tiles would
+silently alias each other's streams.
 
 **Global tile identity.** ``tile_offset``/``grid_tiles_w`` let a shard of
 a domain-decomposed lattice derive the SAME counters the single-device
@@ -38,6 +42,61 @@ from jax.experimental import pallas as pl
 from .philox import philox_proposal_fields
 
 
+def check_counter_capacity(n_tiles: int, k_per_tile: int) -> None:
+    """Guard the c0 counter word: ``tile_id * k_per_tile + j`` is computed
+    in uint32, so the GLOBAL proposal-index space must fit in 2^32 or
+    distant tiles silently alias each other's Philox streams. A 3200x3200
+    lattice of 8x16 tiles (80_000 tiles, k~128) uses ~10^7 counters —
+    comfortably inside; the wrap point is real for k_per_tile blowups."""
+    if n_tiles * k_per_tile > 2 ** 32:
+        raise ValueError(
+            f"fused-Philox counter overflow: {n_tiles} global tiles x "
+            f"{k_per_tile} proposals/tile = {n_tiles * k_per_tile} counters "
+            f"exceeds the uint32 counter space (2^32); shrink k_per_tile "
+            f"or enlarge the tile")
+
+
+def _apply_proposal(out_ref, dom_ref, dirs_ref, r, c, dirn, ua, ud, *,
+                    t_eps: float, t_eps_mu: float):
+    """One elementary update at absolute (r, c) of ``out_ref`` — the single
+    source of the ESCG action semantics shared by the one-round kernel and
+    the multi-MCS megakernel."""
+    d = pl.load(dirs_ref, (pl.ds(dirn, 1), slice(None)))[0]
+    nr = r + d[0]
+    nc = c + d[1]
+
+    s = pl.load(out_ref, (pl.ds(r, 1), pl.ds(c, 1)))[0, 0]
+    n = pl.load(out_ref, (pl.ds(nr, 1), pl.ds(nc, 1)))[0, 0]
+    cell_dt = s.dtype
+    s = s.astype(jnp.int32)
+    n = n.astype(jnp.int32)
+
+    same = s == n
+    migrate = ua < t_eps
+    interact = (ua >= t_eps) & (ua < t_eps_mu)
+    reproduce = ua >= t_eps_mu
+    p1 = pl.load(dom_ref, (pl.ds(s, 1), pl.ds(n, 1)))[0, 0]
+    p2 = pl.load(dom_ref, (pl.ds(n, 1), pl.ds(s, 1)))[0, 0]
+    kill_n = interact & (ud < p1)
+    kill_s = interact & ~kill_n & (ud < p1 + p2)
+    rep_to_n = reproduce & (n == 0)
+    rep_to_s = reproduce & (s == 0)
+    zero = jnp.int32(0)
+    new_s = jnp.where(migrate, n,
+            jnp.where(kill_s, zero,
+            jnp.where(rep_to_s, n, s)))
+    new_n = jnp.where(migrate, s,
+            jnp.where(kill_n, zero,
+            jnp.where(rep_to_n, s, n)))
+    new_s = jnp.where(same, s, new_s)
+    new_n = jnp.where(same, n, new_n)
+
+    pl.store(out_ref, (pl.ds(r, 1), pl.ds(c, 1)),
+             new_s.astype(cell_dt).reshape(1, 1))
+    pl.store(out_ref, (pl.ds(nr, 1), pl.ds(nc, 1)),
+             new_n.astype(cell_dt).reshape(1, 1))
+
+
 def _kernel(seed_ref, round_ref, off_ref, dom_ref, dirs_ref, grid_ref,
             out_ref, *, t_eps: float, t_eps_mu: float, k: int, iw: int,
             interior: int, nbhd: int, gw: int):
@@ -60,43 +119,9 @@ def _kernel(seed_ref, round_ref, off_ref, dom_ref, dirs_ref, grid_ref,
         dirn = lax.dynamic_index_in_dim(dirns, jj, keepdims=False)
         ua = lax.dynamic_index_in_dim(uact, jj, keepdims=False)
         ud = lax.dynamic_index_in_dim(udom, jj, keepdims=False)
-
-        r = 1 + cell // iw
-        c = 1 + cell % iw
-        d = pl.load(dirs_ref, (pl.ds(dirn, 1), slice(None)))[0]
-        nr = r + d[0]
-        nc = c + d[1]
-
-        s = pl.load(out_ref, (pl.ds(r, 1), pl.ds(c, 1)))[0, 0]
-        n = pl.load(out_ref, (pl.ds(nr, 1), pl.ds(nc, 1)))[0, 0]
-        cell_dt = s.dtype
-        s = s.astype(jnp.int32)
-        n = n.astype(jnp.int32)
-
-        same = s == n
-        migrate = ua < t_eps
-        interact = (ua >= t_eps) & (ua < t_eps_mu)
-        reproduce = ua >= t_eps_mu
-        p1 = pl.load(dom_ref, (pl.ds(s, 1), pl.ds(n, 1)))[0, 0]
-        p2 = pl.load(dom_ref, (pl.ds(n, 1), pl.ds(s, 1)))[0, 0]
-        kill_n = interact & (ud < p1)
-        kill_s = interact & ~kill_n & (ud < p1 + p2)
-        rep_to_n = reproduce & (n == 0)
-        rep_to_s = reproduce & (s == 0)
-        zero = jnp.int32(0)
-        new_s = jnp.where(migrate, n,
-                jnp.where(kill_s, zero,
-                jnp.where(rep_to_s, n, s)))
-        new_n = jnp.where(migrate, s,
-                jnp.where(kill_n, zero,
-                jnp.where(rep_to_n, s, n)))
-        new_s = jnp.where(same, s, new_s)
-        new_n = jnp.where(same, n, new_n)
-
-        pl.store(out_ref, (pl.ds(r, 1), pl.ds(c, 1)),
-                 new_s.astype(cell_dt).reshape(1, 1))
-        pl.store(out_ref, (pl.ds(nr, 1), pl.ds(nc, 1)),
-                 new_n.astype(cell_dt).reshape(1, 1))
+        _apply_proposal(out_ref, dom_ref, dirs_ref, 1 + cell // iw,
+                        1 + cell % iw, dirn, ua, ud, t_eps=t_eps,
+                        t_eps_mu=t_eps_mu)
         return 0
 
     lax.fori_loop(0, k, body, 0)
@@ -125,6 +150,11 @@ def escg_tile_round_fused(grid: jax.Array, seed: jax.Array,
     gh, gw = h // th, w // tw
     iw = tw - 2
     interior = (th - 2) * (tw - 2)
+    if grid_tiles_w is None:
+        # single-lattice call: the local tile grid IS the global one.
+        # Sharded callers pass grid_tiles_w and guard with the true
+        # global tile count themselves (core/sharded.py).
+        check_counter_capacity(gh * gw, k_per_tile)
 
     kern = functools.partial(
         _kernel, t_eps=float(t_eps), t_eps_mu=float(t_eps_mu),
@@ -148,3 +178,123 @@ def escg_tile_round_fused(grid: jax.Array, seed: jax.Array,
         out_shape=jax.ShapeDtypeStruct((h, w), grid.dtype),
         interpret=interpret,
     )(seed_arr, round_arr, off_arr, dom, dirs, grid)
+
+
+# ------------------------ multi-MCS megakernel ---------------------------- #
+
+def _mega_kernel(seeds_ref, shifts_ref, off_ref, dom_ref, dirs_ref,
+                 grid_ref, out_ref, counts_ref, *, t_eps: float,
+                 t_eps_mu: float, k: int, iw: int, interior: int,
+                 nbhd: int, gw: int, lgh: int, lgw: int, th: int, tw: int,
+                 n_steps: int, n_counts: int):
+    """K Monte-Carlo steps over the whole (resident) lattice, one launch.
+
+    The per-tile grid of the single-round kernel is folded into an
+    in-kernel loop — TPU grid iterations run sequentially on a core, so
+    nothing is lost; what is gained is that the K-step shift/sweep/count
+    cycle never leaves VMEM. Each fori_loop step t: torus-roll by
+    -shifts[t] (concat + dynamic_slice — the frame drifts exactly like the
+    jit-level ``jnp.roll`` of the one-round path), sweep every tile with
+    proposals from Philox counters keyed by (seeds[t], global tile id),
+    then bank per-species cell counts into counts_ref[t]."""
+    h = lgh * th
+    w = lgw * tw
+    out_ref[...] = grid_ref[...]
+
+    def step(t, _):
+        sr = pl.load(shifts_ref, (pl.ds(t, 1), slice(None)))[0]
+        g = out_ref[...]
+        g = lax.dynamic_slice_in_dim(jnp.concatenate([g, g], 0),
+                                     sr[0], h, 0)
+        g = lax.dynamic_slice_in_dim(jnp.concatenate([g, g], 1),
+                                     sr[1], w, 1)
+        out_ref[...] = g
+        seed = pl.load(seeds_ref, (pl.ds(t, 1), slice(None)))[0]
+
+        def tile_body(tile_idx, _):
+            ti = tile_idx // lgw
+            tj = tile_idx % lgw
+            tile_id = ((off_ref[0, 0] + ti.astype(jnp.uint32))
+                       * jnp.uint32(gw)
+                       + (off_ref[0, 1] + tj.astype(jnp.uint32)))
+            idx = tile_id * jnp.uint32(k) + lax.iota(jnp.uint32, k)
+            cells, dirns, uact, udom = philox_proposal_fields(
+                idx, jnp.uint32(0), seed[0], seed[1], interior, nbhd)
+            tr = ti * th
+            tc = tj * tw
+
+            def prop_body(jj, _):
+                cell = lax.dynamic_index_in_dim(cells, jj, keepdims=False)
+                dirn = lax.dynamic_index_in_dim(dirns, jj, keepdims=False)
+                ua = lax.dynamic_index_in_dim(uact, jj, keepdims=False)
+                ud = lax.dynamic_index_in_dim(udom, jj, keepdims=False)
+                _apply_proposal(out_ref, dom_ref, dirs_ref,
+                                tr + 1 + cell // iw, tc + 1 + cell % iw,
+                                dirn, ua, ud, t_eps=t_eps,
+                                t_eps_mu=t_eps_mu)
+                return 0
+
+            lax.fori_loop(0, k, prop_body, 0)
+            return 0
+
+        lax.fori_loop(0, lgh * lgw, tile_body, 0)
+
+        gi = out_ref[...].astype(jnp.int32)
+        for s in range(n_counts):       # static unroll over species + 1
+            cnt = jnp.sum((gi == s).astype(jnp.int32))
+            pl.store(counts_ref, (pl.ds(t, 1), pl.ds(s, 1)),
+                     cnt.reshape(1, 1))
+        return 0
+
+    lax.fori_loop(0, n_steps, step, 0)
+
+
+def escg_tile_rounds_fused(grid: jax.Array, seeds: jax.Array,
+                           shifts: jax.Array, dom: jax.Array,
+                           dirs: jax.Array, tile_shape: Tuple[int, int],
+                           k_per_tile: int, t_eps: float, t_eps_mu: float,
+                           species: int, neighbourhood: int = 4,
+                           interpret: bool = False,
+                           tile_offset: Optional[jax.Array] = None,
+                           grid_tiles_w: Optional[int] = None):
+    """K fused MCS per ``pallas_call`` (the ``k_mcs`` megakernel).
+
+    seeds: (K, 2) uint32 per-MCS key words; shifts: (K, 2) int32 per-MCS
+    torus shifts — both produced by ``engines.multi_round_inputs`` so the
+    schedule is bit-identical to K driver-level calls of the one-round
+    path. Returns ``(grid, counts)`` with counts (K, species + 1) int32,
+    counts[t] == metrics.counts(grid after step t) — the per-MCS density
+    stream the drivers need, banked in-kernel so no intermediate grid
+    round-trips to HBM. The grid stays in the drifted frame, exactly like
+    the roll_back=False one-round path. ``tile_offset``/``grid_tiles_w``
+    key counters by global tile identity when ``grid`` is one shard."""
+    h, w = grid.shape
+    th, tw = tile_shape
+    lgh, lgw = h // th, w // tw
+    iw = tw - 2
+    interior = (th - 2) * (tw - 2)
+    n_steps = int(seeds.shape[0])
+    if grid_tiles_w is None:
+        check_counter_capacity(lgh * lgw, k_per_tile)
+
+    kern = functools.partial(
+        _mega_kernel, t_eps=float(t_eps), t_eps_mu=float(t_eps_mu),
+        k=int(k_per_tile), iw=int(iw), interior=int(interior),
+        nbhd=int(neighbourhood),
+        gw=int(lgw if grid_tiles_w is None else grid_tiles_w),
+        lgh=int(lgh), lgw=int(lgw), th=int(th), tw=int(tw),
+        n_steps=n_steps, n_counts=int(species) + 1)
+    seeds_arr = seeds.reshape(n_steps, 2).astype(jnp.uint32)
+    shifts_arr = shifts.reshape(n_steps, 2).astype(jnp.int32)
+    if tile_offset is None:
+        tile_offset = jnp.zeros((2,), jnp.uint32)
+    off_arr = jnp.reshape(tile_offset, (1, 2)).astype(jnp.uint32)
+
+    # single program, whole lattice resident: no grid, full-array refs
+    return pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((h, w), grid.dtype),
+                   jax.ShapeDtypeStruct((n_steps, int(species) + 1),
+                                        jnp.int32)),
+        interpret=interpret,
+    )(seeds_arr, shifts_arr, off_arr, dom, dirs, grid)

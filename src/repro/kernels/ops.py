@@ -106,3 +106,37 @@ def escg_round_fused(grid, seed, round_idx, shift, dom, tile_shape,
                                   float(t_eps_mu), neighbourhood,
                                   _default_interpret(interpret), roll_back,
                                   grid_tiles_w)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_shape", "k_per_tile",
+                                             "t_eps", "t_eps_mu", "species",
+                                             "neighbourhood", "interpret",
+                                             "grid_tiles_w"))
+def _escg_rounds_fused_impl(grid, seeds, shifts, tile_offset, dom,
+                            tile_shape, k_per_tile, t_eps, t_eps_mu,
+                            species, neighbourhood, interpret,
+                            grid_tiles_w):
+    dirs = jnp.asarray(DIRS, jnp.int32)
+    return escg_fused_kernel.escg_tile_rounds_fused(
+        grid, seeds, shifts, jnp.asarray(dom, jnp.float32), dirs,
+        tile_shape, k_per_tile, t_eps, t_eps_mu, species, neighbourhood,
+        interpret=interpret, tile_offset=tile_offset,
+        grid_tiles_w=grid_tiles_w)
+
+
+def escg_rounds_fused(grid, seeds, shifts, dom, tile_shape, k_per_tile,
+                      t_eps, t_eps_mu, species, neighbourhood=4,
+                      interpret=None, tile_offset=None, grid_tiles_w=None):
+    """K fused MCS in ONE pallas_call (the ``k_mcs`` megakernel): the
+    per-step torus roll happens IN-KERNEL, so unlike ``escg_round_fused``
+    there is no jit-level roll and no roll_back knob — the grid comes back
+    in the drifted frame of the last step, with per-step species counts
+    (K, species + 1) banked alongside (see escg_update_fused)."""
+    if tile_offset is None:
+        tile_offset = jnp.zeros((2,), jnp.uint32)
+    return _escg_rounds_fused_impl(grid, seeds, shifts, tile_offset, dom,
+                                   tile_shape, k_per_tile, float(t_eps),
+                                   float(t_eps_mu), int(species),
+                                   neighbourhood,
+                                   _default_interpret(interpret),
+                                   grid_tiles_w)

@@ -62,8 +62,9 @@ def philox_proposal_fields(idx, round_idx, k0, k1, interior: int,
     counter layout, DESIGN.md §3): counter = (idx, round_idx, 0, 0) with
     ``idx`` the GLOBAL proposal index (global tile id * K + j), key =
     ``(k0, k1)``. The four output words become (cell, dirn, u_act, u_dom);
-    uniform ints via modulus (paper §3.2.1 — bias < 2^-22 at 32 bits),
-    uniform floats from the top 24 bits (exact in f32, half-open [0, 1)).
+    uniform ints via modulus (paper §3.2.1 — bias at most
+    max(interior, nbhd) / 2^32 for a 32-bit word reduced mod m), uniform
+    floats from the top 24 bits (exact in f32, half-open [0, 1)).
 
     Keying by global identity only — never by shard layout — is what lets
     every device of the sharded engines regenerate exactly the streams of

@@ -1,8 +1,13 @@
 """Benchmark smoke tests: every benchmarks/*.py module runs end-to-end in
 its tiny ``ESCG_BENCH_SMOKE=1`` configuration (benchmarks/common.py) and
 emits at least one well-formed CSV row — benchmark code can never silently
-rot behind the paper figures it reproduces (DESIGN.md §7)."""
+rot behind the paper figures it reproduces (DESIGN.md §7). Plus fast
+in-process tests of the gate machinery itself: the (fixed) median, the v3
+row/document schema, and the trajectory-regression compare that the
+perf-smoke CI job runs with --compare."""
+import copy
 import glob
+import json
 import os
 import subprocess
 import sys
@@ -10,6 +15,8 @@ import sys
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:          # `import benchmarks.*` from the repo root
+    sys.path.insert(0, REPO)
 
 # roofline_table legitimately emits nothing without dry-run records; it
 # must still exit cleanly
@@ -57,6 +64,172 @@ def test_modules_discovered():
 @pytest.mark.parametrize("module", MODULES)
 def test_benchmark_smoke(module):
     _assert_csv_rows(module, _run_smoke(module))
+
+
+# -------------------- timing statistics (common.py) ----------------------- #
+
+def test_median_even_and_odd():
+    """The regression this PR fixes: ``sorted[n // 2]`` is the MAX of a
+    2-sample run (exactly what the gate used to time with iters=2)."""
+    from benchmarks.common import median
+    assert median([3.0, 1.0, 2.0]) == 2.0           # odd: middle element
+    assert median([1.0, 2.0, 3.0, 4.0]) == 2.5      # even: mean of middle 2
+    assert median([10.0, 2.0]) == 6.0               # NOT max(10.0)
+    assert median([5.0]) == 5.0
+    with pytest.raises(ValueError):
+        median([])
+
+
+def test_time_stats_true_median(monkeypatch):
+    """time_stats must report the true median over a scripted clock — the
+    even-iters case returns the midpoint, never the slower sample."""
+    from benchmarks import common
+
+    ticks = iter([0.0, 1.0,      # call 1: 1 s
+                  1.0, 4.0,      # call 2: 3 s
+                  4.0, 6.0,      # call 3: 2 s
+                  6.0, 11.0])    # call 4: 5 s
+    monkeypatch.setattr(common.time, "perf_counter", lambda: next(ticks))
+    stats = common.time_stats(lambda: None, warmup=0, iters=4)
+    assert stats == {"median_us": 2.5e6, "mean_us": 2.75e6,
+                     "min_us": 1e6, "max_us": 5e6, "n": 4}
+
+
+# ------------------- gate schema + trajectory compare ---------------------- #
+
+def _gate_doc():
+    """A minimal schema-valid v3 document covering every required local
+    kernel and scenario."""
+    from benchmarks import bench_gate as bg
+
+    def row(kernel, scenario):
+        return {
+            "name": f"kernelgate_{scenario}_sublattice_{kernel}",
+            "us_per_call": 100.0, "derived": "1.0 Mupd/s",
+            "family": "sublattice", "scenario": scenario,
+            "local_kernel": kernel, "engine": "sublattice",
+            "backend": "cpu", "lattice": [16, 32], "mcs": 2,
+            "n_trials": 0, "n_pad": 0, "updates_per_s": 1e6,
+            "timing": {"median_us": 100.0, "mean_us": 110.0,
+                       "min_us": 90.0, "max_us": 140.0, "n": 3},
+        }
+    rows = [row(k, bg.SCENARIOS[0]) for k in bg.LOCAL_KERNELS]
+    rows += [row("jnp", sc) for sc in bg.SCENARIOS[1:]]
+    return {"schema": bg.SCHEMA, "backend": "cpu", "devices": 1,
+            "smoke": True, "unix_time": 1700000000, "rows": rows}
+
+
+def test_gate_document_schema_v3():
+    from benchmarks import bench_gate as bg
+    doc = _gate_doc()
+    assert bg.validate_gate_document(doc) == []
+    # v3 rows must separate requested trials from the padded batch
+    bad = copy.deepcopy(doc)
+    bad["rows"][0]["n_pad"] = -1
+    bad["rows"][0]["n_trials"] = 2
+    assert any("n_pad" in e for e in bg.validate_gate_document(bad))
+    # timing stats are mandatory and positive
+    bad = copy.deepcopy(doc)
+    del bad["rows"][0]["timing"]
+    assert any("timing" in e for e in bg.validate_gate_document(bad))
+    bad = copy.deepcopy(doc)
+    bad["rows"][0]["timing"]["median_us"] = 0
+    assert any("median_us" in e for e in bg.validate_gate_document(bad))
+    # legacy v2 rows (conflated 'trials') no longer validate
+    bad = copy.deepcopy(doc)
+    del bad["rows"][0]["n_trials"]
+    assert any("n_trials" in e for e in bg.validate_gate_document(bad))
+    # dropping a kernel from coverage fails the document
+    bad = copy.deepcopy(doc)
+    bad["rows"] = [r for r in bad["rows"] if r["local_kernel"] != "fused"]
+    assert any("fused" in e for e in bg.validate_gate_document(bad))
+
+
+def test_compare_documents_gates_regressions():
+    from benchmarks import bench_gate as bg
+    base = _gate_doc()
+    # identical docs compare clean
+    assert bg.compare_documents(copy.deepcopy(base), base, 0.5) == []
+    # a >threshold updates_per_s drop on a matching row fails
+    cand = copy.deepcopy(base)
+    cand["rows"][0]["updates_per_s"] = base["rows"][0]["updates_per_s"] * 0.3
+    failures = bg.compare_documents(cand, base, 0.5)
+    assert len(failures) == 1 and cand["rows"][0]["name"] in failures[0]
+    # ...but survives a generous threshold
+    assert bg.compare_documents(cand, base, 0.75) == []
+    # no matching (family, scenario, kernel, backend) keys at all: the
+    # gate refuses to vacuously pass
+    cand = copy.deepcopy(base)
+    for r in cand["rows"]:
+        r["backend"] = "tpu"
+    assert any("compared nothing" in f
+               for f in bg.compare_documents(cand, base, 0.5))
+    # different smoke flags are incomparable, not regressions
+    cand = copy.deepcopy(base)
+    cand["smoke"] = False
+    cand["rows"][0]["updates_per_s"] = 1.0
+    assert bg.compare_documents(cand, base, 0.5) == []
+    # an invalid baseline fails loudly
+    assert bg.compare_documents(copy.deepcopy(base), {"schema": "nope"},
+                                0.5)
+    # nonsense thresholds are rejected
+    assert bg.compare_documents(copy.deepcopy(base), base, 1.5)
+
+
+def test_gate_cli_compare_exits_nonzero_on_regression(tmp_path,
+                                                      monkeypatch):
+    """The acceptance criterion: ``bench_gate --compare`` must exit
+    non-zero on a synthetic regressed row — and append the candidate to
+    the history trajectory BEFORE failing."""
+    from benchmarks import bench_gate as bg
+    base = _gate_doc()
+    regressed = copy.deepcopy(base)
+    for r in regressed["rows"]:
+        r["updates_per_s"] = 1.0
+    base_p = tmp_path / "baseline.json"
+    cand_p = tmp_path / "cand.json"
+    hist_p = tmp_path / "BENCH_history.jsonl"
+    base_p.write_text(json.dumps(base))
+    cand_p.write_text(json.dumps(regressed))
+
+    argv = ["bench_gate", "--compare", str(base_p), "--candidate",
+            str(cand_p), "--regressionThreshold", "0.75", "--history",
+            str(hist_p)]
+    monkeypatch.setattr(sys, "argv", argv)
+    with pytest.raises(SystemExit) as exc:
+        bg.main()
+    assert exc.value.code == 1
+    # the trajectory entry landed despite the failure, and validates
+    assert bg.validate_file(str(hist_p)) == []
+    assert json.loads(hist_p.read_text())["rows"][0]["updates_per_s"] == 1.0
+
+    # the clean case passes and appends a second history line
+    monkeypatch.setattr(
+        sys, "argv",
+        ["bench_gate", "--compare", str(base_p), "--candidate", str(base_p),
+         "--regressionThreshold", "0.5", "--history", str(hist_p)])
+    bg.main()
+    assert len(hist_p.read_text().splitlines()) == 2
+    assert bg.validate_file(str(hist_p)) == []
+
+
+def test_validate_file_dispatches_history_and_rows(tmp_path):
+    """validate_file must accept gate documents, history JSONL (one
+    document per line) and plain BENCH_JSON row streams — and reject a
+    malformed document embedded in a history line."""
+    from benchmarks import bench_gate as bg
+    doc = _gate_doc()
+    hist = tmp_path / "hist.jsonl"
+    hist.write_text(json.dumps(doc, separators=(",", ":")) + "\n"
+                    + json.dumps(doc, separators=(",", ":")) + "\n")
+    assert bg.validate_file(str(hist)) == []
+    rows = tmp_path / "rows.jsonl"
+    rows.write_text('{"name": "x", "us_per_call": 3.5, "derived": ""}\n')
+    assert bg.validate_file(str(rows)) == []
+    bad_doc = dict(doc, rows=[])
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps(bad_doc, separators=(",", ":")) + "\n")
+    assert bg.validate_file(str(bad))
 
 
 @pytest.mark.slow

@@ -144,6 +144,49 @@ def test_trial_driver_matches_oracle(name, local_kernel):
     np.testing.assert_array_equal(r.extinction_mcs, ro.extinction_mcs)
 
 
+def _multi_mcs_pairs():
+    """Every (engine, local_kernel) pair whose caps admit k_mcs > 1 —
+    registry-driven, so a new megakernel-capable engine is covered the
+    moment it registers. Engines with a local-kernel knob must run the
+    'fused' kernel (validate_params enforces it)."""
+    return [(spec.name, "fused" if spec.caps.local_kernels else "jnp")
+            for spec in engines.engine_specs() if spec.caps.multi_mcs]
+
+
+@pytest.mark.parametrize("name,local_kernel", _multi_mcs_pairs())
+@pytest.mark.parametrize("k_mcs", [2, 3])
+def test_k_mcs_bit_identical_to_single_step(name, local_kernel, k_mcs):
+    """The multi-MCS megakernel contract (DESIGN.md §6): k_mcs is a pure
+    launch-granularity knob. With N_MCS=3, k_mcs=2 exercises the grouped
+    scan PLUS the remainder launch and k_mcs=3 the exact-multiple path —
+    grids and the per-MCS density stream must match k_mcs=1 bit-for-bit."""
+    base = simulate(_params(name, local_kernel=local_kernel), _dom(),
+                    stop_on_stasis=False)
+    r = simulate(_params(name, local_kernel=local_kernel, k_mcs=k_mcs),
+                 _dom(), stop_on_stasis=False)
+    np.testing.assert_array_equal(r.grid, base.grid)
+    np.testing.assert_array_equal(r.densities, base.densities)
+    assert r.mcs_completed == base.mcs_completed
+
+
+@pytest.mark.parametrize("name,local_kernel", _multi_mcs_pairs())
+def test_k_mcs_trial_driver_bit_identical(name, local_kernel):
+    """run_trials statistics under k_mcs>1 match the k_mcs=1 run of the
+    SAME engine — covers the vmapped grouped path (pallas_fused) and the
+    composed multi_mcs_batch path (sharded_pod) with one assertion."""
+    spec = engines.get_engine(name)
+    if not (spec.caps.vmappable or spec.caps.pod_composable):
+        pytest.skip(f"engine {name!r} cannot run trial batches")
+    base = run_trials(_params(name, local_kernel=local_kernel), _dom(),
+                      n_trials=3, n_mcs=N_MCS, stop_on_stasis=False)
+    r = run_trials(_params(name, local_kernel=local_kernel, k_mcs=2),
+                   _dom(), n_trials=3, n_mcs=N_MCS, stop_on_stasis=False)
+    np.testing.assert_array_equal(r.survival, base.survival)
+    np.testing.assert_array_equal(r.densities, base.densities)
+    np.testing.assert_array_equal(r.stasis_mcs, base.stasis_mcs)
+    np.testing.assert_array_equal(r.extinction_mcs, base.extinction_mcs)
+
+
 def _reflecting_engines():
     """Every engine that supports reflecting (flux=False) boundaries —
     registry-driven, so a new boundary-agnostic engine is covered the

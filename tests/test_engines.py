@@ -172,6 +172,26 @@ def test_registry_caps_drive_validation():
                height=16).validate()
 
 
+def test_k_mcs_validation_is_caps_driven():
+    """k_mcs > 1 is a fused-Philox-family capability (EngineCaps.multi_mcs):
+    engines without it reject, sharded engines demand local_kernel='fused',
+    and k_mcs < 1 is never legal."""
+    from repro.core import EscgParams
+    with pytest.raises(ValueError, match="k_mcs"):
+        EscgParams(k_mcs=0).validate()
+    with pytest.raises(ValueError, match="k_mcs"):
+        EscgParams(engine="sublattice", tile=(8, 8), length=16, height=16,
+                   k_mcs=2).validate()
+    with pytest.raises(ValueError, match="fused"):
+        EscgParams(engine="sharded", tile=(8, 8), length=16, height=16,
+                   local_kernel="jnp", k_mcs=2).validate()
+    # the megakernel family accepts it
+    EscgParams(engine="pallas_fused", tile=(8, 8), length=16, height=16,
+               k_mcs=4).validate()
+    EscgParams(engine="sharded", tile=(8, 8), length=16, height=16,
+               local_kernel="fused", k_mcs=4).validate()
+
+
 def test_custom_engine_dispatches_through_simulate():
     """simulate() must resolve engines purely through the registry — a
     third-party registration works with no driver changes."""

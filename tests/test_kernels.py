@@ -151,6 +151,52 @@ def test_escg_fused_kernel_matches_host_philox_oracle(hw, tile, species,
     assert jnp.array_equal(got, want)
 
 
+@pytest.mark.parametrize("hw,tile,species,nbhd,k_steps", [
+    ((16, 32), (8, 16), 5, 4, 3),
+    ((16, 16), (8, 8), 3, 8, 4),
+])
+def test_escg_megakernel_matches_sequential_fused_rounds(hw, tile, species,
+                                                         nbhd, k_steps):
+    """K grid-resident MCS in ONE pallas_call (escg_rounds_fused) must be
+    bit-identical to K single-round fused kernels run back-to-back in the
+    drifting frame (roll_back=False), and its in-kernel per-step species
+    counts must equal metrics.counts after every step — the k_mcs
+    megakernel contract (DESIGN.md §6)."""
+    from repro.core import metrics
+    h, w = hw
+    k = 61
+    grid = init_grid(jax.random.PRNGKey(h + species), h, w, species, 0.1)
+    offs = (1, 2) if species >= 5 else (1,)
+    dom = jnp.asarray(dm.circulant(species, offs))
+    rng = np.random.RandomState(7)
+    seeds = jnp.asarray(
+        rng.randint(0, 2**32, size=(k_steps, 2), dtype=np.uint32))
+    shifts = jnp.asarray(np.stack(
+        [rng.randint(0, tile[0], k_steps),
+         rng.randint(0, tile[1], k_steps)], axis=1).astype(np.int32))
+    got_g, got_c = ops.escg_rounds_fused(grid, seeds, shifts, dom, tile, k,
+                                         0.25, 0.6, species, nbhd)
+    assert got_c.shape == (k_steps, species + 1)
+    g = grid
+    for t in range(k_steps):
+        g = ops.escg_round_fused(g, seeds[t], jnp.uint32(0), shifts[t],
+                                 dom, tile, k, 0.25, 0.6, nbhd,
+                                 roll_back=False)
+        np.testing.assert_array_equal(
+            np.asarray(got_c[t]), np.asarray(metrics.counts(g, species)),
+            err_msg=f"step {t} counts")
+    np.testing.assert_array_equal(np.asarray(got_g), np.asarray(g))
+
+
+def test_fused_counter_capacity_guard():
+    """tile_id * k + j is a uint32 counter: a tiling whose proposal space
+    exceeds 2^32 must be rejected loudly, never wrapped silently."""
+    from repro.kernels.escg_update_fused import check_counter_capacity
+    check_counter_capacity(1 << 16, 1 << 16)          # exactly 2^32: legal
+    with pytest.raises(ValueError, match="counter"):
+        check_counter_capacity((1 << 16) + 1, 1 << 16)
+
+
 def test_escg_fused_engine_runs_and_conserves():
     from repro.core import EscgParams, simulate
     p = EscgParams(length=32, height=16, species=4, mcs=10, mu=0.0,

@@ -189,6 +189,48 @@ def test_fused_local_kernel_factorization_invariance(subproc):
 
 
 @pytest.mark.slow
+def test_k_mcs_megakernel_factorization_invariance(subproc):
+    """Acceptance property for the multi-MCS megakernel: k_mcs > 1 on
+    ``sharded_pod / local_kernel='fused'`` is bit-identical to the
+    single-device ``pallas_fused`` k_mcs=1 run on EVERY sampled (P, R, C)
+    factorization of 8 fake devices. n_mcs=4 with chunk_mcs=3 and
+    k_mcs=2 drives both grouped-scan shapes (3 = one group + remainder,
+    then a bare-remainder chunk of 1); (P, 1, 1) layouts run the true
+    single-pallas_call megakernel, multi-shard layouts the K-kernels-one-
+    region fallback — same contract either way."""
+    out = subproc("""
+        import numpy as np
+        from repro.core import EscgParams, dominance as dm
+        from repro.core.trials import run_trials
+
+        kw = dict(length=32, height=32, species=5, mobility=1e-3,
+                  tile=(8, 8), empty=0.1, seed=17)
+        dom = dm.RPSLS()
+
+        def run(engine, ms=None, lk='jnp', k=1):
+            return run_trials(EscgParams(engine=engine, mesh_shape=ms,
+                                         local_kernel=lk, k_mcs=k, **kw),
+                              dom, n_trials=5, n_mcs=4, chunk_mcs=3,
+                              stop_on_stasis=False)
+
+        oracle = run('pallas_fused')
+        for ms in ((8, 1, 1), (2, 2, 2), (1, 2, 4), (4, 1, 2)):
+            for k in (2, 3):
+                r = run('sharded_pod', ms, 'fused', k)
+                assert r.n_devices == 8, (ms, k)
+                assert np.array_equal(r.survival, oracle.survival), (ms, k)
+                assert np.array_equal(r.densities,
+                                      oracle.densities), (ms, k)
+                assert np.array_equal(r.stasis_mcs,
+                                      oracle.stasis_mcs), (ms, k)
+                assert np.array_equal(r.extinction_mcs,
+                                      oracle.extinction_mcs), (ms, k)
+        print("K_MCS_FACTORIZATION_INVARIANT")
+    """, n_devices=8)
+    assert "K_MCS_FACTORIZATION_INVARIANT" in out
+
+
+@pytest.mark.slow
 def test_composed_pallas_local_kernel_matches_jnp(subproc):
     """The acceptance pairing: local_kernel='pallas' inside the composed
     shard_map region is bit-identical to the jnp sweeps, for both the

@@ -105,6 +105,36 @@ def test_async_stats_schedule_invariance():
         assert r.mcs_completed == 50, async_stats
 
 
+def test_async_early_exit_drops_speculative_chunk_with_live_dynamics():
+    """The sharp edge of the speculative schedule: single species with
+    empties reaches stasis at MCS 1 (alive <= 1 forever) while the
+    densities KEEP evolving as rare reproduction events fill empties
+    (migration-dominated rates keep the fill slow enough not to saturate)
+    — so the chunk the async driver has in flight at the early exit
+    carries genuinely different statistics. Folding it in would change
+    densities and mcs_completed; every field must match the synchronous
+    schedule exactly."""
+    p = EscgParams(length=12, height=12, species=1, mcs=40, chunk_mcs=4,
+                   empty=0.6, mu=0.0, sigma=0.02, epsilon=1.0, seed=2)
+    dom = np.zeros((1, 1), np.float32)
+    sync = run_trials(p, dom, n_trials=3, async_stats=False)
+    # the dynamics are really live past the exit point: four more MCS of
+    # the same run change the density stream, so the dropped speculative
+    # chunk WOULD have perturbed the stats had it been folded in
+    longer = run_trials(p.replace(chunk_mcs=8), dom, n_trials=3,
+                        async_stats=False)
+    assert not np.array_equal(longer.densities, sync.densities)
+    assert longer.mcs_completed == 8
+
+    r = run_trials(p, dom, n_trials=3, async_stats=True)
+    assert r.mcs_completed == sync.mcs_completed == 4
+    np.testing.assert_array_equal(r.survival, sync.survival)
+    np.testing.assert_array_equal(r.densities, sync.densities)
+    np.testing.assert_array_equal(r.stasis_mcs, sync.stasis_mcs)
+    np.testing.assert_array_equal(r.extinction_mcs, sync.extinction_mcs)
+    assert (r.stasis_mcs == 1).all()
+
+
 def test_cell_dtype_honoured_and_value_stable():
     """The trial driver honours params.cell_dtype (the legacy vmap runner
     dropped it), and the dtype does not change trajectories."""
