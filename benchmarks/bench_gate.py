@@ -17,28 +17,38 @@ functions below (also exposed as ``--validate FILE...`` for CI):
 
 * a *row* must carry ``name`` (non-empty str), ``us_per_call`` (number
   > 0) and ``derived`` (str);
-* the *document* must carry ``schema == "escg-bench-kernels/v3"``,
+* the *document* must carry ``schema == "escg-bench-kernels/v4"``,
   ``backend``/``devices``/``smoke`` metadata and a non-empty ``rows``
   list whose entries extend the row schema with ``family``,
   ``scenario`` (the registered scenario-layer preset the cell ran,
   DESIGN.md §10), ``local_kernel``, ``engine``, ``backend`` (new in v3
   — rows are self-identifying so history lines compare across
-  runners), ``lattice`` ([H, W]), ``mcs``, ``n_trials`` (the REQUESTED
-  trial count; 0 for the single-lattice families), ``n_pad`` (the
-  padded batch that actually ran — v2 conflated the two as ``trials``
-  and normalized throughput over padding), ``updates_per_s``
-  (normalized over *useful* updates: ``mcs * n_cells * max(n_trials,
-  1)``, never the padded batch) and ``timing`` (per-call stats:
-  ``median_us`` / ``mean_us`` / ``min_us`` / ``max_us`` / ``n``) — and
-  whose rows must cover ALL three local kernels AND all three swept
-  scenarios {park3, zhong_density, nspecies5} (the acceptance
-  criterion; a sweep that silently drops one fails validation, not
-  review).
+  runners), ``observables`` (bool, new in v4 — whether the chunk ran
+  the on-device observable pipeline of DESIGN.md §11), ``lattice``
+  ([H, W]), ``mcs``, ``n_trials`` (the REQUESTED trial count; 0 for
+  the single-lattice families), ``n_pad`` (the padded batch that
+  actually ran — v2 conflated the two as ``trials`` and normalized
+  throughput over padding), ``updates_per_s`` (normalized over
+  *useful* updates: ``mcs * n_cells * max(n_trials, 1)``, never the
+  padded batch) and ``timing`` (per-call stats: ``median_us`` /
+  ``mean_us`` / ``min_us`` / ``max_us`` / ``n``) — and whose rows must
+  cover ALL three local kernels AND all three swept scenarios {park3,
+  zhong_density, nspecies5} (the acceptance criterion; a sweep that
+  silently drops one fails validation, not review).
+
+The v4 sweep records *observable overhead* as paired rows: every
+engine family runs park3/jnp twice, once with the observable pipeline
+off (``observables: false``) and once streaming the park3 observable
+set into the device ring buffer (``observables: true``, name suffix
+``_obs``); the on-row's ``derived`` string carries the measured
+overhead versus its off twin. ISSUE 9's acceptance criterion is that
+this overhead stays within ~10% in the smoke sweep.
 
 Beyond schema validation the gate now *bites*: ``--compare BASELINE``
 diffs the fresh sweep against a committed document and exits non-zero
-when any matching ``(family, scenario, local_kernel, backend)`` row
-regresses ``updates_per_s`` by more than ``--regressionThreshold``
+when any matching ``(family, scenario, local_kernel, backend,
+observables)`` row regresses ``updates_per_s`` by more than
+``--regressionThreshold``
 (fraction; CI uses 0.75 — generous because CPU-runner jitter is real,
 but a genuine order-of-magnitude regression still fails the build).
 ``--history FILE`` appends the full document as one JSONL line (the
@@ -66,7 +76,12 @@ if os.environ.get("ESCG_FAKE_DEVICES"):
         + " --xla_force_host_platform_device_count="
         + os.environ["ESCG_FAKE_DEVICES"])
 
-SCHEMA = "escg-bench-kernels/v3"
+SCHEMA = "escg-bench-kernels/v4"
+SCHEMA_V3 = "escg-bench-kernels/v3"
+# history lines from older gate versions stay valid against the schema
+# they were written under (the trajectory spans schema bumps); fresh
+# documents and compare baselines must carry the CURRENT schema
+KNOWN_SCHEMAS = (SCHEMA_V3, SCHEMA)
 FAMILIES = ("sublattice", "sharded", "sharded_pod")
 LOCAL_KERNELS = ("jnp", "pallas", "fused")
 # scenario-layer sweep (v2): park3 carries the full kernel x family grid;
@@ -111,7 +126,8 @@ def validate_row(obj, ctx: str = "row") -> List[str]:
 TIMING_FIELDS = ("median_us", "mean_us", "min_us", "max_us", "n")
 
 
-def validate_gate_row(obj, ctx: str = "row") -> List[str]:
+def validate_gate_row(obj, ctx: str = "row",
+                      schema: str = SCHEMA) -> List[str]:
     errors = validate_row(obj, ctx)
     if not isinstance(obj, dict):
         return errors
@@ -120,6 +136,8 @@ def validate_gate_row(obj, ctx: str = "row") -> List[str]:
     _check(obj, "local_kernel", str, errors, ctx)
     _check(obj, "engine", str, errors, ctx)
     _check(obj, "backend", str, errors, ctx)
+    if schema != SCHEMA_V3:                 # observables is new in v4
+        _check(obj, "observables", bool, errors, ctx)
     _check(obj, "lattice", list, errors, ctx)
     _check(obj, "mcs", int, errors, ctx)
     _check(obj, "n_trials", int, errors, ctx)
@@ -159,13 +177,20 @@ def validate_gate_row(obj, ctx: str = "row") -> List[str]:
     return errors
 
 
-def validate_gate_document(doc) -> List[str]:
-    """The BENCH_kernels.json artifact the perf-smoke CI job uploads."""
+def validate_gate_document(doc, accept=(SCHEMA,)) -> List[str]:
+    """The BENCH_kernels.json artifact the perf-smoke CI job uploads.
+
+    ``accept`` is the set of schema versions tolerated: fresh documents
+    and compare baselines require the current schema (the default);
+    ``validate_file`` passes KNOWN_SCHEMAS for history lines so older
+    trajectory entries keep validating against the schema they declare."""
     if not isinstance(doc, dict):
         return ["document: not a JSON object"]
     errors: List[str] = []
-    if doc.get("schema") != SCHEMA:
-        errors.append(f"document: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    schema = doc.get("schema")
+    if schema not in accept:
+        errors.append(f"document: schema {schema!r} not in {accept!r}")
+        schema = SCHEMA
     _check(doc, "backend", str, errors, "document")
     _check(doc, "devices", int, errors, "document")
     _check(doc, "smoke", bool, errors, "document")
@@ -177,7 +202,8 @@ def validate_gate_document(doc) -> List[str]:
     if not doc["rows"]:
         errors.append("document: rows is empty")
     for i, row in enumerate(doc["rows"]):
-        errors.extend(validate_gate_row(row, ctx=f"rows[{i}]"))
+        errors.extend(validate_gate_row(row, ctx=f"rows[{i}]",
+                                        schema=schema))
     for fld, want in (("local_kernel", LOCAL_KERNELS),
                       ("scenario", SCENARIOS)):
         covered = {r.get(fld) for r in doc["rows"] if isinstance(r, dict)}
@@ -217,7 +243,8 @@ def validate_file(path: str) -> List[str]:
         rows += 1
         if isinstance(obj, dict) and "schema" in obj:
             errors.extend(f"{path}:{ln_no}: {e}"
-                          for e in validate_gate_document(obj))
+                          for e in validate_gate_document(
+                              obj, accept=KNOWN_SCHEMAS))
         else:
             errors.extend(validate_row(obj, ctx=f"{path}:{ln_no}"))
     if rows == 0:
@@ -231,9 +258,12 @@ def row_key(row: dict):
     """The identity a perf trajectory tracks: what ran and where, never
     how fast. Lattice size / MCS / trial counts are deliberately NOT part
     of the key — those change with sweep sizing, and the smoke guard in
-    ``compare_documents`` keeps apples with apples."""
+    ``compare_documents`` keeps apples with apples. ``observables`` IS
+    part of the key (v4): an obs-on row is a different workload than its
+    off twin and must only ever gate against another obs-on row."""
     return (row.get("family"), row.get("scenario"),
-            row.get("local_kernel"), row.get("backend"))
+            row.get("local_kernel"), row.get("backend"),
+            bool(row.get("observables")))
 
 
 def compare_documents(candidate: dict, baseline: dict,
@@ -241,7 +271,8 @@ def compare_documents(candidate: dict, baseline: dict,
     """Regression diff of two gate documents; returns human-readable
     failures (empty = gate passes).
 
-    A matching ``(family, scenario, local_kernel, backend)`` row regresses
+    A matching ``(family, scenario, local_kernel, backend, observables)``
+    row regresses
     when ``candidate.updates_per_s < baseline.updates_per_s * (1 -
     threshold)``. Documents with different ``smoke`` flags are
     incomparable (different sweep sizes) and compare clean with a note;
@@ -275,7 +306,8 @@ def compare_documents(candidate: dict, baseline: dict,
     if matched == 0:
         failures.append(
             "no candidate row matches any baseline (family, scenario, "
-            "local_kernel, backend) key — the gate compared nothing")
+            "local_kernel, backend, observables) key — the gate compared "
+            "nothing")
     return failures
 
 
@@ -289,11 +321,19 @@ def append_history(doc: dict, path: str) -> None:
 
 # -------------------------------- sweep ----------------------------------- #
 
-def _gate_config(family: str, kernel: str, scenario: str):
+# the obs-on rows stream the park3 scenario observable set (DESIGN.md
+# §11): per-species densities plus the interface-length order parameter —
+# the pairing the overhead acceptance criterion is defined over
+OBS_SET = ("densities", "interface_length")
+
+
+def _gate_config(family: str, kernel: str, scenario: str,
+                 observables: bool = False):
     """(EscgParams, Scenario) for one sweep cell — a scenario-layer
     composition: physics from the registered preset (mobility pinned to
     1e-4 and empty to 0.1 so occupancy is comparable across studies),
-    engine/run from the cell."""
+    engine/run from the cell. ``observables=True`` turns on the
+    device-ring observable pipeline (OBS_SET) for the overhead rows."""
     from repro.core.scenarios import (EngineConfig, RunConfig, compose,
                                       make_scenario)
     from .common import smoke
@@ -306,15 +346,20 @@ def _gate_config(family: str, kernel: str, scenario: str):
     sc = make_scenario(scenario).replace(mobility=1e-4, empty=0.1)
     p = compose(sc, EngineConfig(engine=engine, local_kernel=lk,
                                  tile=(8, 16)),
-                RunConfig(length=L, height=h, seed=0))
+                RunConfig(length=L, height=h, seed=0,
+                          observables=OBS_SET if observables else ()))
     return p, sc
 
 
 def _bench_combo(family: str, kernel: str, scenario: str, mcs: int,
-                 trials: int) -> dict:
+                 trials: int, observables: bool = False) -> dict:
     """Per-call timing stats of one jitted chunk (compile excluded, like
     fig4_3): a simulate() chunk for the one-lattice families, a
-    run_trials chunk for the composed family.
+    run_trials chunk for the composed family. With ``observables=True``
+    the chunk is the observable-pipeline variant (DESIGN.md §11): same
+    dynamics, but every MCS also banks an OBS_SET row into the
+    device-resident ring buffer — the timing delta against the off twin
+    IS the observable overhead the gate records.
 
     Throughput normalization (the v2 bug this schema fixes): the
     composed family pads the trial batch to the pod width, so the kernel
@@ -327,39 +372,58 @@ def _bench_combo(family: str, kernel: str, scenario: str, mcs: int,
     import jax.numpy as jnp
 
     from repro.core import engines
+    from repro.core import observables as obs_mod
     from repro.core.lattice import init_grid
     from .common import time_stats
 
-    p, sc = _gate_config(family, kernel, scenario)
+    p, sc = _gate_config(family, kernel, scenario, observables=observables)
     dom = jnp.asarray(sc.dominance(), jnp.float32)
     built = engines.build(p, dom)
     if family == "sharded_pod":
-        from repro.core.trials import (build_trial_chunk, pad_trials,
+        from repro.core.trials import (build_trial_chunk,
+                                       build_trial_obs_chunk, pad_trials,
                                        trial_grids_and_keys)
         n_trials = trials
         n_pad = pad_trials(n_trials, built.pod_width)
         grids, keys = trial_grids_and_keys(
             p, jax.random.PRNGKey(0), n_pad, sharding=built.key_sharding,
             grid_sharding=built.batch_sharding)
-        chunk = build_trial_chunk(p, dom, built=built)
-        stats = time_stats(lambda: chunk(grids, keys, mcs),
-                           warmup=1, iters=3)
+        if observables:
+            chunk, pipe = build_trial_obs_chunk(p, dom, built=built)
+            ring, pos = obs_mod.ring_init(
+                obs_mod.ring_capacity(p, mcs), (n_pad, pipe.width))
+            stats = time_stats(lambda: chunk(grids, keys, ring, pos, mcs),
+                               warmup=2, iters=9)
+        else:
+            chunk = build_trial_chunk(p, dom, built=built)
+            stats = time_stats(lambda: chunk(grids, keys, mcs),
+                               warmup=2, iters=9)
         n_upd = mcs * p.n_cells * n_trials
     else:
-        from repro.core.simulation import build_chunk_fn
-        chunk = build_chunk_fn(p, dom, one_mcs=built.one_mcs)
+        from repro.core.simulation import build_chunk_fn, build_obs_chunk_fn
         grid = init_grid(jax.random.PRNGKey(0), p.height, p.length,
                          p.species, p.empty)
         if built.grid_sharding is not None:
             grid = jax.device_put(grid, built.grid_sharding)
-        stats = time_stats(lambda: chunk(grid, jax.random.PRNGKey(1), mcs),
-                           warmup=1, iters=3)
+        if observables:
+            chunk, pipe = build_obs_chunk_fn(p, dom, built=built)
+            ring, pos = obs_mod.ring_init(
+                obs_mod.ring_capacity(p, mcs), (pipe.width,))
+            stats = time_stats(
+                lambda: chunk(grid, jax.random.PRNGKey(1), ring, pos, mcs),
+                warmup=2, iters=9)
+        else:
+            chunk = build_chunk_fn(p, dom, one_mcs=built.one_mcs)
+            stats = time_stats(
+                lambda: chunk(grid, jax.random.PRNGKey(1), mcs),
+                warmup=2, iters=9)
         n_upd = mcs * p.n_cells
         n_trials = n_pad = 0
     t = stats["median_us"] / 1e6
     upd_s = n_upd / t
+    suffix = "_obs" if observables else ""
     return {
-        "name": f"kernelgate_{scenario}_{family}_{kernel}",
+        "name": f"kernelgate_{scenario}_{family}_{kernel}{suffix}",
         "us_per_call": stats["median_us"],
         "derived": f"{upd_s / 1e6:.3f} Mupd/s engine={p.engine} "
                    f"scenario={scenario}",
@@ -368,6 +432,7 @@ def _bench_combo(family: str, kernel: str, scenario: str, mcs: int,
         "local_kernel": kernel,
         "engine": p.engine,
         "backend": jax.default_backend(),
+        "observables": bool(observables),
         "lattice": [p.height, p.length],
         "mcs": mcs,
         "n_trials": n_trials,
@@ -382,18 +447,37 @@ def run(out_path: Optional[str] = None) -> dict:
 
     from .common import SMOKE, emit, note, smoke
 
-    mcs = smoke(2, 10)
+    # 16 MCS even in smoke: the observable-overhead pairs measure a ~5%
+    # timing delta, which 2-MCS µs-scale calls bury in CPU jitter (scan
+    # compile time is length-independent, so the longer chunk costs CI
+    # nothing); _bench_combo's iters=9 median serves the same purpose
+    mcs = smoke(16, 16)
     trials = smoke(2, 4)
     note(f"kernel gate: {LOCAL_KERNELS} x {FAMILIES} on scenario "
          f"{SCENARIOS[0]!r}, + scenarios {SCENARIOS[1:]} per family "
-         f"(jnp), {mcs} MCS ({len(jax.devices())} device(s))")
-    combos = [(family, kernel, SCENARIOS[0])
+         f"(jnp), + observable-overhead pairs per family, {mcs} MCS "
+         f"({len(jax.devices())} device(s))")
+    combos = [(family, kernel, SCENARIOS[0], False)
               for family in FAMILIES for kernel in LOCAL_KERNELS]
-    combos += [(family, "jnp", scenario)
+    combos += [(family, "jnp", scenario, False)
                for scenario in SCENARIOS[1:] for family in FAMILIES]
+    # observable-overhead pairs (v4): the on-rows; their off twins are
+    # already in the park3 grid above — row_key pairs them by identity
+    combos += [(family, "jnp", SCENARIOS[0], True) for family in FAMILIES]
     rows = []
-    for family, kernel, scenario in combos:
-        row = _bench_combo(family, kernel, scenario, mcs, trials)
+    for family, kernel, scenario, obs in combos:
+        row = _bench_combo(family, kernel, scenario, mcs, trials,
+                           observables=obs)
+        if obs:
+            # annotate the on-row with the measured overhead vs its twin
+            twin_key = row_key({**row, "observables": False})
+            twin = next(r for r in rows if row_key(r) == twin_key)
+            overhead = (twin["updates_per_s"] / row["updates_per_s"]
+                        - 1.0) if row["updates_per_s"] else float("inf")
+            row["derived"] += f" obs_overhead={overhead:+.1%}"
+            note(f"observable overhead {family}/{kernel}: {overhead:+.1%} "
+                 f"({twin['updates_per_s']:.0f} -> "
+                 f"{row['updates_per_s']:.0f} upd/s)")
         rows.append(row)
         emit(row["name"], row["us_per_call"] / 1e6, row["derived"])
     doc = {

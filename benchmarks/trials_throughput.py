@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import EscgParams, dominance as dm
+from repro.core.scenarios import EngineConfig, RunConfig, make_scenario
 from repro.core.trials import run_trials
 
 from .common import emit, note, smoke, time_fn
@@ -61,15 +61,17 @@ def _mesh_shapes(L: int, tile) -> tuple:
 def run() -> None:
     note(f"device-sharded IID trials, L={L}, {MCS} MCS each (beyond-paper); "
          f"{jax.local_device_count()} local device(s)")
-    p = EscgParams(length=L, height=L, species=5, mobility=1e-4,
-                   engine="batched", seed=0)
-    dom = dm.RPSLS()
+    # nspecies5's C(5,{1,2}) circulant IS the classic RPSLS network;
+    # observables pinned off — this sweep measures pure dynamics throughput
+    sc = make_scenario("nspecies5", mobility=1e-4)
+    rc = RunConfig(length=L, height=L, mcs=MCS, chunk_mcs=MCS, seed=0,
+                   observables=())
 
     for n in smoke((4,), (4, 16)):
         for d in _device_counts():
             f = lambda: run_trials(  # noqa: E731
-                p, dom, n, n_mcs=MCS, trial_devices=d, chunk_mcs=MCS,
-                stop_on_stasis=False)
+                sc, None, n, trial_devices=d, stop_on_stasis=False,
+                engine=EngineConfig(engine="batched"), run=rc)
             t = time_fn(f, warmup=1, iters=2)
             emit(f"trials_pod_n{n}_d{d}", t,
                  f"{n * MCS * L * L / t / 1e6:.2f} Mupd/s aggregate "
@@ -77,13 +79,12 @@ def run() -> None:
 
     # composed pod x grid mesh: same trials, every admissible factorization
     tile = (8, 8) if L % 16 else (8, 16)
-    pc = EscgParams(length=L, height=L, species=5, mobility=1e-4,
-                    engine="sharded_pod", tile=tile, seed=0)
     n = smoke(4, 8)
     for ms in _mesh_shapes(L, tile):
         f = lambda: run_trials(  # noqa: E731
-            pc.replace(mesh_shape=ms), dom, n, n_mcs=MCS, chunk_mcs=MCS,
-            stop_on_stasis=False)
+            sc, None, n, stop_on_stasis=False,
+            engine=EngineConfig(engine="sharded_pod", tile=tile,
+                                mesh_shape=ms), run=rc)
         t = time_fn(f, warmup=1, iters=2)
         emit(f"trials_composed_n{n}_m{ms[0]}x{ms[1]}x{ms[2]}", t,
              f"{n * MCS * L * L / t / 1e6:.2f} Mupd/s aggregate on "

@@ -34,9 +34,9 @@ def run() -> None:
         t0 = time.perf_counter()
         res = run_trials(
             sc, None, TRIALS, stop_on_stasis=False,
-            engine_config=EngineConfig(engine=engine, tile=(8, 16)),
-            run_config=RunConfig(length=L, height=L, mcs=MCS,
-                                 chunk_mcs=300, seed=11))
+            engine=EngineConfig(engine=engine, tile=(8, 16)),
+            run=RunConfig(length=L, height=L, mcs=MCS,
+                          chunk_mcs=300, seed=11))
         dt = time.perf_counter() - t0
         ext = res.extinction_mcs[:, dm.PAPER - 1]       # per-trial, exact MCS
         ext_str = ("/".join(str(int(e)) for e in ext))

@@ -16,7 +16,7 @@ import time
 
 import numpy as np
 
-from repro.core import EscgParams, dominance, io, simulate
+from repro.core import EscgParams, dominance, io, scenarios, simulate
 
 OUT = "out/longrun"
 
@@ -58,8 +58,11 @@ def main() -> None:
             print(f"[longrun] checkpoint @ MCS {total}")
 
     t0 = time.time()
-    res = simulate(params, dom, grid0=grid0, key=key,
-                   hooks=[checkpoint_hook])
+    # scenario-first invocation (DESIGN.md §10): decompose the (possibly
+    # checkpoint-loaded) flat params and keep the explicit dominance net
+    sc, eng_cfg, run_cfg = scenarios.decompose(params)
+    res = simulate(sc, dom, grid0=grid0, key=key,
+                   hooks=[checkpoint_hook], engine=eng_cfg, run=run_cfg)
     dt = time.time() - t0
     total = start_mcs + res.mcs_completed
     io.save_state(OUT, params.replace(mcs=args.mcs), res.grid, total,

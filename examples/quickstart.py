@@ -3,12 +3,17 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Runs a 128x128 three-species ESCG at low mobility, prints density traces
-and an ASCII snapshot; saves the lattice + densities under out/quickstart.
+Runs a 128x128 three-species ESCG at low mobility via the scenario-first
+API (DESIGN.md §10): physics from the registered ``park3`` preset, run
+control from a ``RunConfig``. The preset's declared observables stream
+through the device ring buffer (DESIGN.md §11), so the result carries an
+interface-length trace alongside the densities. Prints density traces and
+an ASCII snapshot; saves the lattice + densities under out/quickstart.
 """
 import numpy as np
 
-from repro.core import EscgParams, dominance, io, simulate
+from repro.core import (EngineConfig, RunConfig, compose, io,
+                        make_scenario, simulate)
 
 GLYPHS = " RPS45678"
 
@@ -19,28 +24,32 @@ def ascii_lattice(grid: np.ndarray, step: int = 4) -> str:
 
 
 def main() -> None:
-    params = EscgParams(
-        length=128, height=128, species=3,
-        mobility=3e-5,                  # below the RMF threshold -> spirals
-        empty=0.1, mcs=400, chunk_mcs=100,
-        engine="batched", seed=0, out_dir="out/quickstart")
-    dom = dominance.RPS()
+    scenario = make_scenario("park3", empty=0.1)   # RMF spirals, S=3
+    engine = EngineConfig(engine="batched")
+    run = RunConfig(length=128, height=128, mcs=400, chunk_mcs=100,
+                    seed=0, out_dir="out/quickstart")
 
     def report(mcs_done, grid, counts):
         dens = counts[-1] / counts[-1].sum()
         print(f"MCS {mcs_done:5d}  empty={dens[0]:.3f} "
               f"R={dens[1]:.3f} P={dens[2]:.3f} S={dens[3]:.3f}")
 
-    result = simulate(params, dom, hooks=[report])
+    result = simulate(scenario, engine=engine, run=run, hooks=[report])
     print("\nFinal lattice (1:4 downsample):")
     print(ascii_lattice(result.grid))
-    io.save_state(params.out_dir, params, result.grid,
-                  result.mcs_completed, dom)
-    io.export_densities_csv(f"{params.out_dir}/densities.csv",
+    params = compose(scenario, engine, run)
+    io.save_state(run.out_dir, params, result.grid,
+                  result.mcs_completed, scenario.dominance())
+    io.export_densities_csv(f"{run.out_dir}/densities.csv",
                             result.densities)
-    print(f"\nsaved state + densities to {params.out_dir}/")
+    print(f"\nsaved state + densities to {run.out_dir}/")
     assert (result.densities[-1][1:] > 0).all(), "coexistence expected"
     print("all three species coexist — RMF low-mobility regime replicated")
+    # the preset's streamed observables (DESIGN.md §11): interface length
+    # tracks the spiral-boundary density, computed on-device every MCS
+    iface = result.observables["interface_length"][:, 0]
+    print(f"interface length {iface[0]:.3f} -> {iface[-1]:.3f} "
+          f"({len(iface)} MCS on-device trace)")
 
 
 if __name__ == "__main__":

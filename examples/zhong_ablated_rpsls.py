@@ -28,11 +28,11 @@ def main() -> None:
     # the whole study is one registered scenario (DESIGN.md §10): physics
     # (ablated dominance network, mobility, S=5) come from the registry
     res = simulate(make_scenario("zhong_density"),
-                   engine_config=EngineConfig(engine=args.engine),
-                   run_config=RunConfig(length=args.L, height=args.L,
-                                        mcs=args.mcs, chunk_mcs=500,
-                                        seed=args.seed,
-                                        out_dir="out/zhong"),
+                   engine=EngineConfig(engine=args.engine),
+                   run=RunConfig(length=args.L, height=args.L,
+                                 mcs=args.mcs, chunk_mcs=500,
+                                 seed=args.seed,
+                                 out_dir="out/zhong"),
                    stop_on_stasis=False)
 
     print(f"L={args.L}, {args.mcs} MCS, engine={args.engine}")

@@ -1,9 +1,11 @@
 """Core ESCG engine — the paper's contribution as a composable JAX module."""
-from . import batched, dominance, engines, io, lattice, metrics, park
-from . import reference, rng, rules, scenarios, simulation, sublattice, trials
+from . import batched, dominance, engines, io, lattice, metrics, observables
+from . import park, reference, results, rng, rules, scenarios, simulation
+from . import sublattice, trials
 from .engines import BuiltEngine, EngineCaps, EngineSpec, engine_names
 from .engines import engine_specs, get_engine, register
 from .params import EscgParams
+from .results import RunResult
 from .scenarios import (EngineConfig, RunConfig, Scenario, ScenarioCaps,
                         ScenarioSpec, compose, decompose, get_scenario,
                         make_scenario, register_scenario, scenario_names,
@@ -22,13 +24,13 @@ def __getattr__(name: str):
 
 __all__ = [
     "EscgParams", "ENGINES", "SimResult", "simulate", "run_trials",
-    "TrialResult",
+    "TrialResult", "RunResult",
     "BuiltEngine", "EngineCaps", "EngineSpec", "engine_names",
     "engine_specs", "get_engine", "register",
     "Scenario", "ScenarioCaps", "ScenarioSpec", "EngineConfig", "RunConfig",
     "register_scenario", "scenario_names", "scenario_specs", "get_scenario",
     "make_scenario", "compose", "decompose",
-    "batched", "dominance", "engines", "io", "lattice", "metrics", "park",
-    "reference", "rng", "rules", "scenarios", "simulation", "sublattice",
-    "trials",
+    "batched", "dominance", "engines", "io", "lattice", "metrics",
+    "observables", "park", "reference", "results", "rng", "rules",
+    "scenarios", "simulation", "sublattice", "trials",
 ]

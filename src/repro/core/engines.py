@@ -62,6 +62,16 @@ class BuiltEngine(NamedTuple):
     # -> (grids, keys', counts (n, K, species+1), kept (n,), att (n,)).
     multi_mcs: Optional[Callable] = None
     multi_mcs_batch: Optional[Callable] = None
+    # observable hook (DESIGN.md §11): ``observe(grid, counts) ->
+    # (obs_width,) float32`` — one streamed ring-buffer row, evaluated
+    # inside the drivers' jitted chunks at per-MCS cadence. Non-None
+    # exactly when ``params.observables`` is non-empty; ``engines.build``
+    # attaches the registry-generic implementation
+    # (observables.build_observe) for every engine family, so the
+    # supported set is identical across sublattice/sharded/sharded_pod x
+    # local kernels by construction. Must never consume PRNG state —
+    # observables-on/off bit-identity is part of the engine contract.
+    observe: Optional[Callable[[jax.Array, jax.Array], jax.Array]] = None
 
 
 @dataclass(frozen=True)
@@ -93,6 +103,15 @@ class EngineCaps:
                                # to at the one_mcs level (same key -> same
                                # trajectory); drives the registry-wide
                                # cross-engine equivalence suite
+    observables: Optional[Tuple[str, ...]] = None
+                               # streaming observables (DESIGN.md §11)
+                               # the engine supports; None = the full
+                               # registry (core/observables.py) — every
+                               # registered observable is a pure jit-level
+                               # grid/counts read, so engines only
+                               # restrict this when their step hides the
+                               # lattice from XLA. Params validation
+                               # checks requested names against it.
     equiv_oracles: Tuple[Tuple[str, str], ...] = ()
                                # per-local-kernel oracle overrides as
                                # (local_kernel, oracle) pairs: a local
@@ -216,6 +235,18 @@ def validate_params(p: "EscgParams") -> None:
                 f"{p.engine!r} (got {p.local_kernel!r}): only the "
                 "in-kernel Philox schedule can thread K MCS through one "
                 "launch")
+    if p.obs_capacity < 0:
+        raise ValueError(f"obs_capacity must be >= 0, got {p.obs_capacity}")
+    if p.observables:
+        from . import observables as obs_mod  # lazy: avoid import cycle
+        for name in p.observables:
+            obs_mod.get_observable(name)     # raises on unknown names
+            if spec.caps.observables is not None \
+                    and name not in spec.caps.observables:
+                raise ValueError(
+                    f"engine {p.engine!r} supports observables "
+                    f"{spec.caps.observables}, got {name!r} "
+                    "(EngineCaps.observables rails, DESIGN.md §11)")
     if p.mesh_shape is not None:
         if not spec.caps.pod_composable:
             raise ValueError(
@@ -247,7 +278,31 @@ def build(params: "EscgParams", dom: Optional[jax.Array] = None
         dom = dom_mod.circulant(params.species)
     if not isinstance(dom, jax.Array):
         dom = jnp.asarray(dom, jnp.float32)
-    return get_engine(params.engine).build(params, dom)
+    built = get_engine(params.engine).build(params, dom)
+    if params.observables and built.observe is None:
+        # registry-generic observe hook (DESIGN.md §11): one jit-level
+        # implementation serves every engine family — on sharded grids
+        # the reductions lower to per-shard partials + all-reduce, the
+        # same path as the stasis counts. Builders may pre-attach a
+        # specialized hook; absent that, every engine gets the same set.
+        from . import observables as obs_mod  # lazy: avoid import cycle
+        hook = obs_mod.build_observe(params)
+        if built.grid_sharding is not None:
+            # pin the row replicated across the grid mesh: domain-
+            # decomposed engines step through shard_map(check_rep=False)
+            # regions, and without the constraint the partitioner may
+            # combine per-device ring updates by SUMMING the row across
+            # a mesh axis (observed 2x counts with the snapshot
+            # observable's block reshape in the program)
+            rep = jax.sharding.NamedSharding(
+                built.grid_sharding.mesh, jax.sharding.PartitionSpec())
+            inner = hook
+
+            def hook(grid, counts, _inner=inner, _rep=rep):
+                return jax.lax.with_sharding_constraint(
+                    _inner(grid, counts), _rep)
+        built = built._replace(observe=hook)
+    return built
 
 
 # --------------------------- registered engines --------------------------- #

@@ -1,0 +1,325 @@
+"""On-device observable pipelines (DESIGN.md §11).
+
+The paper offloads per-MCS density counting to the GPU (§3.2.2,
+densities.metal) because host-side statistics dominate long runs; the
+wafer-scale agent-evolution work (PAPERS.md) generalizes the lesson:
+instrumentation must be computed where the state lives and flushed
+asynchronously. This module is that mechanism — a first-class registry of
+*streaming observables* (mirroring ``engines.py`` / ``scenarios.py``)
+that the chunked drivers evaluate INSIDE the jitted engine step and bank
+into a device-resident ring buffer; the host only ever sees the flushed
+rows at chunk boundaries.
+
+Registry contract (``@register_observable``):
+
+* ``width(params) -> int`` — static row-slice width of the observable;
+* ``compute(grid, counts, params) -> (width,) float32`` — pure function
+  of the lattice and the already-banked per-MCS species counts. It MUST
+  NOT consume PRNG state or mutate anything: observables-on vs
+  observables-off trajectories are bit-identical *by construction*, and
+  the equivalence suite pins it (tests/test_observables.py);
+* ``post(rows, params) -> np.ndarray`` — host-side finalization of the
+  flushed raw rows (e.g. raw species counts -> densities). Device rows
+  carry raw integer statistics in float32 (exact below 2**24), so the
+  host can reconstruct counts losslessly at the lattice sizes tested;
+* ``from_counts`` — True when the observable is a pure function of the
+  banked counts. Under the k_mcs megakernel intermediate grids never
+  leave the kernel, so count-derived observables keep per-MCS cadence
+  (read from the banked (K, S+1) counts) while grid-derived observables
+  are *lag-held*: rows within a K-step launch group repeat the value
+  sampled at the previous group boundary (documented flush semantics,
+  DESIGN.md §11).
+
+Ring-buffer layout: a ``(capacity, obs_width)`` float32 array (trial
+batches: ``(capacity, n_pad, obs_width)``) advanced by
+``lax.dynamic_update_slice`` at slot ``pos % capacity`` with a monotonic
+``pos`` counter. The host flush (:func:`ring_flush`) unrolls
+``[start, stop)`` modulo capacity and drops the oldest rows when a chunk
+outran the capacity — wraparound is lossy-by-design for the trial
+driver's statistics stream and forbidden (capacity >= chunk) for
+``simulate``, whose stasis accounting reads the flushed rows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ObservableSpec", "register_observable", "observable_names",
+    "observable_specs", "get_observable", "resolve", "ObsPipeline",
+    "build_pipeline", "build_observe", "ring_init", "ring_push",
+    "ring_flush", "ring_capacity",
+]
+
+
+# ------------------------------- registry ---------------------------------- #
+
+@dataclass(frozen=True)
+class ObservableSpec:
+    """One registered streaming observable (see module docstring)."""
+    name: str
+    width: Callable[..., int] = field(repr=False, default=None)
+    compute: Callable[..., jax.Array] = field(repr=False, default=None)
+    post: Callable[..., np.ndarray] = field(repr=False, default=None)
+    from_counts: bool = False   # derivable from the banked per-MCS counts
+    description: str = ""
+
+
+_REGISTRY: Dict[str, ObservableSpec] = {}
+
+
+def register_observable(name: str, *, width: Callable[..., int],
+                        from_counts: bool = False,
+                        post: Optional[Callable] = None,
+                        description: str = ""):
+    """Decorator: register ``compute(grid, counts, params) -> (width,)
+    float32`` under ``name``. Re-registration replaces (same contract as
+    the engine and scenario registries)."""
+    def deco(compute_fn):
+        _REGISTRY[name] = ObservableSpec(
+            name=name, width=width, compute=compute_fn,
+            post=post or (lambda rows, p: rows),
+            from_counts=from_counts, description=description)
+        return compute_fn
+    return deco
+
+
+def observable_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def observable_specs() -> Tuple[ObservableSpec, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def get_observable(name: str) -> ObservableSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown observable {name!r}; registered: {observable_names()}"
+        ) from None
+
+
+def resolve(names) -> Tuple[ObservableSpec, ...]:
+    """Requested names -> specs in canonical registry order, deduplicated.
+    Unknown names raise (the same error params validation surfaces)."""
+    want = set()
+    for n in names:
+        get_observable(n)
+        want.add(n)
+    return tuple(s for s in _REGISTRY.values() if s.name in want)
+
+
+# ------------------------------- pipeline ---------------------------------- #
+
+@dataclass(frozen=True)
+class ObsPipeline:
+    """A resolved observable set for one params: row layout + kernels.
+
+    The row is the concatenation of every spec's slice in registry order;
+    ``densities`` is always present and always first (the drivers
+    reconstruct per-MCS species counts — stasis detection, hooks, the
+    density history — from its raw-count columns, so the flushed ring
+    fully replaces the legacy per-chunk counts transfer)."""
+    specs: Tuple[ObservableSpec, ...]
+    widths: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    width: int
+    _params: object = field(repr=False, default=None)
+
+    # ------------------------- device side ----------------------------- #
+    def row(self, grid: jax.Array, counts: jax.Array) -> jax.Array:
+        """Full (width,) float32 row — per-MCS cadence path."""
+        p = self._params
+        return jnp.concatenate(
+            [s.compute(grid, counts, p).astype(jnp.float32).reshape(-1)
+             for s in self.specs])
+
+    def grid_values(self, grid: jax.Array) -> Dict[str, jax.Array]:
+        """Grid-derived slices sampled at a launch-group boundary (the
+        lag-hold state under k_mcs > 1); count-derived specs excluded."""
+        p = self._params
+        return {s.name: s.compute(grid, None, p).astype(jnp.float32)
+                .reshape(-1) for s in self.specs if not s.from_counts}
+
+    def row_held(self, counts: jax.Array,
+                 held: Dict[str, jax.Array]) -> jax.Array:
+        """Row for one megakernel-interior MCS: count-derived slices from
+        the banked ``counts``, grid-derived slices from ``held``."""
+        p = self._params
+        parts = []
+        for s in self.specs:
+            if s.from_counts:
+                parts.append(s.compute(None, counts, p)
+                             .astype(jnp.float32).reshape(-1))
+            else:
+                parts.append(held[s.name])
+        return jnp.concatenate(parts)
+
+    # -------------------------- host side ------------------------------ #
+    def counts_from_rows(self, rows: np.ndarray, species: int) -> np.ndarray:
+        """Per-MCS (..., S+1) int32 species counts from flushed raw rows
+        (the ``densities`` slice is leading and stores raw counts)."""
+        return rows[..., : species + 1].astype(np.int32)
+
+    def split(self, rows: np.ndarray) -> Dict[str, np.ndarray]:
+        """Flushed raw rows (..., width) -> finalized per-observable
+        arrays, each spec's ``post`` applied."""
+        p = self._params
+        out = {}
+        for s, off, w in zip(self.specs, self.offsets, self.widths):
+            out[s.name] = s.post(
+                np.asarray(rows[..., off:off + w], np.float64), p)
+        return out
+
+
+def build_pipeline(p) -> ObsPipeline:
+    """Pipeline for ``p.observables``; ``densities`` is implicitly
+    prepended when absent (the drivers' stasis/density accounting needs
+    its raw-count columns — see :class:`ObsPipeline`)."""
+    names = tuple(p.observables)
+    if "densities" not in names:
+        names = ("densities",) + names
+    specs = resolve(names)
+    widths = tuple(int(s.width(p)) for s in specs)
+    offsets = tuple(int(x) for x in np.cumsum((0,) + widths[:-1]))
+    return ObsPipeline(specs=specs, widths=widths, offsets=offsets,
+                       width=int(sum(widths)), _params=p)
+
+
+def build_observe(p) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """The engine-facing ``observe(grid, counts) -> (obs_width,) float32``
+    hook carried by ``BuiltEngine.observe`` (validated by ``EngineCaps``
+    rails). One generic jit-level implementation serves every engine
+    family: on sharded lattices the reductions lower to per-shard
+    partials plus all-reduces (the same mechanism as the stasis counts,
+    and as ``kernels/density.py`` under shard_map with psum)."""
+    pipe = build_pipeline(p)
+    return pipe.row
+
+
+# ------------------------------ ring buffer -------------------------------- #
+
+def ring_init(capacity: int, row_shape: Tuple[int, ...]):
+    """Device-resident ring: ``(zeros (capacity, *row_shape) f32,
+    pos=0)``. ``pos`` counts every row ever pushed (monotonic); the slot
+    written is ``pos % capacity``."""
+    if capacity < 1:
+        raise ValueError(f"ring capacity must be >= 1, got {capacity}")
+    return (jnp.zeros((capacity,) + tuple(row_shape), jnp.float32),
+            jnp.int32(0))
+
+
+def ring_push(ring: jax.Array, pos: jax.Array, row: jax.Array):
+    """Write ``row`` at slot ``pos % capacity`` via
+    ``lax.dynamic_update_slice``; returns ``(ring, pos + 1)``. Trace-safe
+    inside scan/fori bodies."""
+    cap = ring.shape[0]
+    idx = jax.lax.rem(pos, jnp.int32(cap))
+    start = (idx,) + (jnp.int32(0),) * (ring.ndim - 1)
+    return (jax.lax.dynamic_update_slice(ring, row[None].astype(ring.dtype),
+                                         start),
+            pos + jnp.int32(1))
+
+
+def ring_push_many(ring: jax.Array, pos: jax.Array, rows: jax.Array):
+    """Push ``rows[(t, ...)]`` in order t = 0..T-1 (T static). Used where
+    rows are banked first — the megakernel's per-step counts, the trial
+    batch's scanned row stack — and written to the ring afterwards."""
+    def body(t, carry):
+        r, q = carry
+        return ring_push(r, q, rows[t])
+    return jax.lax.fori_loop(0, rows.shape[0], body, (ring, pos))
+
+
+def ring_flush(buf_h: np.ndarray, start: int, stop: int) -> np.ndarray:
+    """Host-side unroll of rows ``[start, stop)`` (absolute push indices)
+    out of a flushed ring buffer. Rows older than ``stop - capacity``
+    were overwritten on device and are dropped (lossy wraparound — the
+    trial driver's documented semantics; ``simulate`` sizes the ring so
+    this never drops)."""
+    cap = buf_h.shape[0]
+    if stop < start:
+        raise ValueError(f"ring_flush: stop {stop} < start {start}")
+    lost = max(0, (stop - start) - cap)
+    idx = np.arange(start + lost, stop, dtype=np.int64) % cap
+    return buf_h[idx]
+
+
+def ring_capacity(p, default_rows: int) -> int:
+    """Effective ring capacity: ``params.obs_capacity`` when set, else
+    ``default_rows`` (the drivers pass their per-chunk row count — a
+    lossless auto default)."""
+    return int(p.obs_capacity) if p.obs_capacity else int(default_rows)
+
+
+# -------------------------- registered observables ------------------------- #
+# Canonical registry order is row-layout order: densities first (the
+# drivers depend on it — build_pipeline), then the grid-derived set.
+
+@register_observable(
+    "densities", width=lambda p: p.species + 1, from_counts=True,
+    post=lambda rows, p: rows / p.n_cells,
+    description="per-species population share, col 0 = empties (paper "
+                "§3.2.2 densities.metal; raw counts on device, "
+                "normalized on flush)")
+def _obs_densities(grid, counts, p):
+    # reuses the banked per-MCS counts — zero extra compute on device
+    return counts.astype(jnp.float32)
+
+
+@register_observable(
+    "interface_length", width=lambda p: 1,
+    post=lambda rows, p: rows / (2.0 * p.n_cells),
+    description="fraction of unlike nearest-neighbour bonds on the torus "
+                "— the domain-wall / interface length density of the RMF "
+                "spiral regime")
+def _obs_interface_length(grid, counts, p):
+    right = jnp.roll(grid, -1, axis=1)
+    down = jnp.roll(grid, -1, axis=0)
+    n_unlike = (jnp.sum(grid != right) + jnp.sum(grid != down))
+    return n_unlike.astype(jnp.float32).reshape(1)
+
+
+@register_observable(
+    "cluster_size", width=lambda p: 1,
+    post=lambda rows, p: rows / (2.0 * p.n_cells),
+    description="same-species occupied-bond density — a cluster-size "
+                "proxy: rises toward the coordination bound as domains "
+                "coarsen")
+def _obs_cluster_size(grid, counts, p):
+    right = jnp.roll(grid, -1, axis=1)
+    down = jnp.roll(grid, -1, axis=0)
+    n_like = (jnp.sum((grid == right) & (grid > 0))
+              + jnp.sum((grid == down) & (grid > 0)))
+    return n_like.astype(jnp.float32).reshape(1)
+
+
+def _snap_shape(p) -> Tuple[int, int]:
+    return min(8, p.height), min(8, p.length)
+
+
+def _snap_post(rows: np.ndarray, p) -> np.ndarray:
+    gh, gw = _snap_shape(p)
+    return rows.reshape(rows.shape[:-1] + (gh, gw))
+
+
+@register_observable(
+    "snapshot", width=lambda p: _snap_shape(p)[0] * _snap_shape(p)[1],
+    post=_snap_post,
+    description="coarse-grained lattice snapshot: dominant species label "
+                "per block of an (up to) 8x8 partition — the serving "
+                "layer's progress thumbnail")
+def _obs_snapshot(grid, counts, p):
+    gh, gw = _snap_shape(p)
+    bh, bw = p.height // gh, p.length // gw
+    g = grid[: gh * bh, : gw * bw].reshape(gh, bh, gw, bw)
+    labels = jax.lax.iota(jnp.int32, p.species + 1).reshape(1, 1, -1)
+    blocks = g.transpose(0, 2, 1, 3).reshape(gh, gw, bh * bw)
+    hist = jnp.sum(blocks[..., None] == labels[None], axis=2)
+    return jnp.argmax(hist, axis=-1).astype(jnp.float32).reshape(-1)

@@ -77,6 +77,17 @@ class EscgParams:
     # family only (engine pallas_fused, or sharded/sharded_pod with
     # local_kernel='fused'); bit-identical to k_mcs=1 by construction.
     k_mcs: int = 1
+    # streaming observables evaluated inside the jitted engine step and
+    # ring-buffered in device memory (DESIGN.md §11); () = off (legacy
+    # per-chunk counts transfer). Names resolve through the observable
+    # registry (core/observables.py); scenario-first driver calls fill
+    # this from ScenarioCaps.observables.
+    observables: Tuple[str, ...] = ()
+    # ring-buffer row capacity; 0 = auto (one chunk of rows, lossless).
+    # The trial driver tolerates smaller capacities (lossy wraparound);
+    # simulate requires capacity >= chunk_mcs (its stasis accounting
+    # reads the flushed rows).
+    obs_capacity: int = 0
 
     # ------------------------------------------------------------------ #
     @property
@@ -145,6 +156,8 @@ class EscgParams:
             d["shard_grid"] = tuple(d["shard_grid"])
         if d.get("mesh_shape") is not None:
             d["mesh_shape"] = tuple(d["mesh_shape"])
+        if d.get("observables") is not None:
+            d["observables"] = tuple(d["observables"])
         return EscgParams(**d)
 
     def replace(self, **kw) -> "EscgParams":
@@ -225,9 +238,30 @@ def add_cli_args(p: argparse.ArgumentParser) -> None:
                    help="Monte-Carlo steps fused into one kernel launch "
                         "(the multi-MCS megakernel; fused-Philox engines "
                         "only, bit-identical to --kMcs 1)")
+    p.add_argument("--observables", type=str, default=None,
+                   help="comma-separated streaming observables computed "
+                        "on-device and ring-buffered (DESIGN.md §11), "
+                        "e.g. 'densities,interface_length'; 'none' "
+                        "disables; default: off (with --scenario, the "
+                        "preset's ScenarioCaps.observables)")
+    p.add_argument("--obsCapacity", dest="obs_capacity", type=int,
+                   default=0,
+                   help="observable ring-buffer capacity in rows; 0 = "
+                        "auto (one chunk, lossless)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--chunkMcs", dest="chunk_mcs", type=int, default=100)
     p.add_argument("--outDir", dest="out_dir", type=str, default="escg_out")
+
+
+def parse_observables(s: Optional[str]) -> Optional[Tuple[str, ...]]:
+    """``--observables`` string -> tuple ('none'/'' -> (), None -> None:
+    flag not given, defer to the scenario/default)."""
+    if s is None:
+        return None
+    s = s.strip()
+    if not s or s.lower() == "none":
+        return ()
+    return tuple(x.strip() for x in s.split(",") if x.strip())
 
 
 def params_from_args(args: argparse.Namespace) -> EscgParams:
@@ -235,6 +269,8 @@ def params_from_args(args: argparse.Namespace) -> EscgParams:
     kw = {k: v for k, v in vars(args).items() if k in fields and v is not None}
     if "tile" in kw:
         kw["tile"] = tuple(kw["tile"])
+    if "observables" in kw:
+        kw["observables"] = parse_observables(kw["observables"]) or ()
     if kw.get("shard_grid") is not None:
         kw["shard_grid"] = tuple(kw["shard_grid"])
     if kw.get("mesh_shape") is not None:

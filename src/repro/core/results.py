@@ -1,0 +1,53 @@
+"""Unified run-result protocol (DESIGN.md §11).
+
+``simulate`` returns a ``SimResult`` and ``trials.run_trials`` a
+``TrialResult``; both now satisfy one structural :class:`RunResult`
+protocol — a common ``observables`` mapping fed by the device ring-buffer
+flush, plus ``to_json``/``from_json`` round-trips — so the serving layer
+and figure modules can consume either without caring which driver
+produced it. The legacy attribute surface (``densities`` et al.) stays
+as deprecated aliases on the concrete classes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Protocol, runtime_checkable
+
+import numpy as np
+
+__all__ = ["RunResult", "encode_observables", "decode_observables"]
+
+
+@runtime_checkable
+class RunResult(Protocol):
+    """Structural contract shared by SimResult and TrialResult.
+
+    ``observables`` maps registered observable names (core/observables.py)
+    to host arrays flushed from the device ring buffer; every result also
+    reports how many MCS actually ran and serializes losslessly.
+    """
+
+    @property
+    def observables(self) -> Mapping[str, np.ndarray]: ...
+
+    @property
+    def mcs_completed(self) -> int: ...
+
+    def to_json(self) -> str: ...
+
+
+def encode_observables(obs: Mapping[str, np.ndarray]) -> Dict[str, dict]:
+    """JSON-encodable payload for an observables mapping: dtype + shape +
+    flat data per stream (float64/int arrays round-trip exactly)."""
+    out = {}
+    for name, arr in obs.items():
+        a = np.asarray(arr)
+        out[name] = {"dtype": str(a.dtype), "shape": list(a.shape),
+                     "data": a.reshape(-1).tolist()}
+    return out
+
+
+def decode_observables(payload: Mapping[str, dict]) -> Dict[str, np.ndarray]:
+    """Inverse of :func:`encode_observables`."""
+    return {name: np.asarray(d["data"], dtype=np.dtype(d["dtype"]))
+            .reshape(tuple(d["shape"]))
+            for name, d in payload.items()}

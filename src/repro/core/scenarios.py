@@ -39,7 +39,7 @@ import numpy as np
 
 from . import dominance as dom_mod
 from .engines import get_engine
-from .params import EscgParams
+from .params import EscgParams, parse_observables
 
 __all__ = [
     "Scenario", "ScenarioCaps", "ScenarioSpec", "EngineConfig", "RunConfig",
@@ -192,6 +192,12 @@ class RunConfig:
     save: bool = False
     resume: bool = False
     out_dir: str = "escg_out"
+    # streaming observables (DESIGN.md §11): None = defer to the
+    # scenario's ScenarioCaps.observables (filled by resolve_config on
+    # scenario-first driver calls); () = explicitly off; a tuple of
+    # registered names selects exactly those.
+    observables: Optional[Tuple[str, ...]] = None
+    obs_capacity: int = 0          # ring rows; 0 = auto (one chunk)
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)
@@ -201,7 +207,10 @@ class RunConfig:
 
     @staticmethod
     def from_json(s: str) -> "RunConfig":
-        return RunConfig(**json.loads(s))
+        d = json.loads(s)
+        if d.get("observables") is not None:
+            d["observables"] = tuple(d["observables"])
+        return RunConfig(**d)
 
 
 # ------------------------------- registry ---------------------------------- #
@@ -343,7 +352,10 @@ def compose(scenario: Scenario, engine: Optional[EngineConfig] = None,
         cell_dtype=engine.cell_dtype, tile=engine.tile, seed=run.seed,
         chunk_mcs=run.chunk_mcs, out_dir=run.out_dir,
         shard_grid=engine.shard_grid, mesh_shape=engine.mesh_shape,
-        local_kernel=engine.local_kernel, k_mcs=engine.k_mcs).validate()
+        local_kernel=engine.local_kernel, k_mcs=engine.k_mcs,
+        observables=(() if run.observables is None
+                     else tuple(run.observables)),
+        obs_capacity=run.obs_capacity).validate()
 
 
 def decompose(params: EscgParams, name: str = ""
@@ -365,7 +377,9 @@ def decompose(params: EscgParams, name: str = ""
         chunk_mcs=params.chunk_mcs, seed=params.seed,
         print_frequency=params.print_frequency,
         num_randoms=params.num_randoms, max_step=params.max_step,
-        save=params.save, resume=params.resume, out_dir=params.out_dir)
+        save=params.save, resume=params.resume, out_dir=params.out_dir,
+        observables=tuple(params.observables),
+        obs_capacity=params.obs_capacity)
     return sc, eng, run
 
 
@@ -378,16 +392,44 @@ def resolve_config(params: Union[EscgParams, Scenario],
     Drivers (``simulate``, ``run_trials``, ``engines.build``) accept either
     the legacy facade or a :class:`Scenario` (+ optional engine/run
     configs). For scenarios with ``dom=None`` the dominance network comes
-    from the registry — the study carries its own physics."""
+    from the registry — the study carries its own physics.
+
+    Scenario-first calls additionally make ``ScenarioCaps.observables``
+    load-bearing (DESIGN.md §11): unless the ``RunConfig`` pins
+    ``observables`` (a tuple, ``()`` = explicitly off), the composed
+    params stream the preset's declared observables — filtered to names
+    the observable registry actually implements (caps also list
+    result-level statistics like ``survival`` that are not streaming
+    observables)."""
     if isinstance(params, Scenario):
         if dom is None:
             dom = params.dominance()
-        return compose(params, engine_config, run_config), dom
+        composed = compose(params, engine_config, run_config)
+        if run_config is None or run_config.observables is None:
+            obs = scenario_observables(params.name)
+            if obs:
+                composed = composed.replace(observables=obs).validate()
+        return composed, dom
     if engine_config is not None or run_config is not None:
         raise ValueError(
             "engine_config/run_config only apply when the first argument "
             "is a Scenario; an EscgParams already carries both layers")
     return params, dom
+
+
+def scenario_observables(name: str) -> Tuple[str, ...]:
+    """The streaming subset of a scenario's ``ScenarioCaps.observables``
+    (DESIGN.md §11): declared names that resolve in the observable
+    registry, in declaration order. Caps may also declare result-level
+    statistics (``survival``, ``stasis_mcs``, ...) — those are computed
+    by the drivers from the same streams, not registered as device
+    observables, and are filtered out here. Ad-hoc scenarios: ()."""
+    from . import observables as obs_mod  # lazy: keep import graph acyclic
+    spec = _spec_for(name)
+    if spec is None:
+        return ()
+    registered = set(obs_mod.observable_names())
+    return tuple(o for o in spec.caps.observables if o in registered)
 
 
 # ------------------------------ CLI bridging ------------------------------- #
@@ -433,6 +475,10 @@ def run_config_from_args(args) -> RunConfig:
         v = getattr(args, f.name, None)
         if v is not None:
             kw[f.name] = v
+    if "observables" in kw:
+        # the CLI carries a comma-separated string; None (flag absent)
+        # never lands here, so absent keeps the defer-to-scenario default
+        kw["observables"] = parse_observables(kw["observables"])
     return RunConfig(**kw)
 
 
@@ -442,7 +488,7 @@ def run_config_from_args(args) -> RunConfig:
 
 @register_scenario("park3", ScenarioCaps(
     species=3, rates="deterministic",
-    observables=("densities", "stasis_mcs"),
+    observables=("densities", "interface_length", "stasis_mcs"),
     description="paper baseline rock-paper-scissors: cyclic C(3,{1}) "
                 "dominance at low mobility (RMF spiral regime)",
     paper="Tables 3.1/3.2; Reichenbach-Mobilia-Frey Fig 1.1"),

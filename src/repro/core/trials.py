@@ -42,7 +42,7 @@ Design invariants (tested in tests/test_trials.py):
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable, Optional, Sequence
 
@@ -54,7 +54,9 @@ from jax.sharding import PartitionSpec as P
 
 from . import dominance as dom_mod
 from . import engines, lattice, metrics
+from . import observables as obs_mod
 from .params import EscgParams
+from .results import decode_observables, encode_observables
 
 POD_AXIS = "pod"   # mesh axis name for the trial dimension
 
@@ -68,6 +70,15 @@ class TrialResult:
     Grids are intentionally absent: at pod scale (thousands of trials) the
     lattices stay device-resident and only the statistics below ever reach
     the host.
+
+    ``observables`` (the ``RunResult`` protocol surface, core/results.py)
+    maps registered observable names to per-trial streams flushed from
+    the device ring buffer, shape ``(n_trials, T, ...)`` with T the rows
+    the ring retained (== MCS consumed when the capacity covers every
+    chunk; lossy wraparound drops the oldest rows per chunk otherwise).
+    Empty when ``params.observables`` was empty. Note
+    ``observables['densities']`` is the per-MCS density *stream*; the
+    ``densities`` field keeps its legacy meaning of final densities.
     """
     survival: np.ndarray       # (n_trials, S) bool — species alive at end
     densities: np.ndarray      # (n_trials, S + 1) — final densities, col 0
@@ -84,6 +95,7 @@ class TrialResult:
                                # for vmapped engines, the full composed
                                # ('pod','rows','cols') mesh size for
                                # pod-composable engines (DESIGN.md §6)
+    observables: dict = field(default_factory=dict)
 
     # --------------------------- statistics ---------------------------- #
     @property
@@ -119,6 +131,7 @@ class TrialResult:
             "kept_fraction": self.kept_fraction,
             "n_trials": self.n_trials,
             "n_devices": self.n_devices,
+            "observables": encode_observables(self.observables),
         })
 
     @staticmethod
@@ -133,6 +146,7 @@ class TrialResult:
             kept_fraction=float(d["kept_fraction"]),
             n_trials=int(d["n_trials"]),
             n_devices=int(d["n_devices"]),
+            observables=decode_observables(d.get("observables", {})),
         )
 
 
@@ -195,7 +209,8 @@ def trial_grids_and_keys(p: EscgParams, key: jax.Array, n_pad: int,
 
 def build_trial_chunk(p: EscgParams, dom: jax.Array,
                       one_mcs: Optional[Callable] = None,
-                      built: Optional[engines.BuiltEngine] = None):
+                      built: Optional[engines.BuiltEngine] = None,
+                      pipe: Optional[obs_mod.ObsPipeline] = None):
     """chunk(grids, keys, n_mcs<static>) -> (grids, keys, final_counts,
     alive[n, n_mcs, S], kept[n], attempts[n]); jitted, device-resident.
     ``alive`` is the only per-MCS output and is what the host streams
@@ -212,6 +227,15 @@ def build_trial_chunk(p: EscgParams, dom: jax.Array,
     Both thread per-trial keys identically (split once per MCS per
     trial), so they are bit-identical for any engine pair whose one-MCS
     functions are.
+
+    With ``pipe`` (an :class:`~.observables.ObsPipeline`) each chunk
+    additionally returns the banked per-MCS observable rows, shape
+    ``(n_mcs, n, obs_width)`` — the device-side stream
+    :func:`build_trial_obs_chunk` copies into the ring buffer. The key
+    chain and every other output are bit-identical to ``pipe=None``
+    (observables never consume PRNG state). Under ``k_mcs > 1``
+    grid-derived slices are lag-held at launch-group boundaries exactly
+    as in ``simulation.build_obs_chunk_fn``.
     """
     s = p.species
     if built is not None and built.one_mcs_batch is not None:
@@ -227,25 +251,48 @@ def build_trial_chunk(p: EscgParams, dom: jax.Array,
                 n = grids.shape[0]
                 q, r = divmod(n_mcs, k_group)
                 kept = att = jnp.zeros((n,), jnp.int32)
-                parts = []
+                parts, row_parts = [], []
+                held = (jax.vmap(pipe.grid_values)(grids)
+                        if pipe is not None else None)
+
+                def launch_rows(cnts_l, held):
+                    # (n, K, S+1) -> (K, n, obs_width), lag-held grid slices
+                    return jax.vmap(lambda c: jax.vmap(pipe.row_held)(
+                        c, held))(jnp.moveaxis(cnts_l, 1, 0))
+
                 if q:
                     def body(carry, _):
-                        g, k, kept, att = carry
+                        g, k, kept, att, held = carry
                         g, k, cnts, k2, a2 = multi_batch(g, k, k_group)
-                        return (g, k, kept + k2, att + a2), cnts
-                    (grids, keys, kept, att), cnts_q = jax.lax.scan(
-                        body, (grids, keys, kept, att), length=q)
+                        rows = (launch_rows(cnts, held)
+                                if pipe is not None else jnp.int32(0))
+                        if pipe is not None:
+                            held = jax.vmap(pipe.grid_values)(g)
+                        return (g, k, kept + k2, att + a2, held), (cnts,
+                                                                   rows)
+                    (grids, keys, kept, att, held), (cnts_q, rows_q) = \
+                        jax.lax.scan(body, (grids, keys, kept, att, held),
+                                     length=q)
                     # (q, n, K, S + 1) -> (n, q * K, S + 1)
                     parts.append(jnp.moveaxis(cnts_q, 0, 1).reshape(
                         n, q * k_group, s + 1))
+                    if pipe is not None:
+                        # (q, K, n, W) -> (q * K, n, W)
+                        row_parts.append(rows_q.reshape(
+                            q * k_group, n, pipe.width))
                 if r:
                     grids, keys, cnts_r, k2, a2 = multi_batch(grids, keys,
                                                               r)
                     kept, att = kept + k2, att + a2
                     parts.append(cnts_r)
+                    if pipe is not None:
+                        row_parts.append(launch_rows(cnts_r, held))
                 cnts = jnp.concatenate(parts, axis=1)
-                return (grids, keys, cnts[:, -1], cnts[:, :, 1:] > 0,
-                        kept, att)
+                out = (grids, keys, cnts[:, -1], cnts[:, :, 1:] > 0,
+                       kept, att)
+                if pipe is not None:
+                    out += (jnp.concatenate(row_parts, axis=0),)
+                return out
 
             return chunk_batch
 
@@ -261,11 +308,16 @@ def build_trial_chunk(p: EscgParams, dom: jax.Array,
                 k, k1 = both[:, 0], both[:, 1]
                 g, k2, a2 = one_mcs_batch(g, k1)
                 cnts = jax.vmap(lambda x: metrics.counts(x, s))(g)
-                return (g, k, kept + k2, att + a2), cnts
-            (g, k, kept, att), cnts = jax.lax.scan(
+                rows = (jax.vmap(pipe.row)(g, cnts)
+                        if pipe is not None else jnp.int32(0))
+                return (g, k, kept + k2, att + a2), (cnts, rows)
+            (g, k, kept, att), (cnts, rows) = jax.lax.scan(
                 body, (grids, keys, zeros, zeros), length=n_mcs)
             cnts = jnp.moveaxis(cnts, 0, 1)      # (n, n_mcs, S + 1)
-            return g, k, cnts[:, -1], cnts[:, :, 1:] > 0, kept, att
+            out = (g, k, cnts[:, -1], cnts[:, :, 1:] > 0, kept, att)
+            if pipe is not None:
+                out += (rows,)                   # (n_mcs, n, W)
+            return out
 
         return chunk_batch
 
@@ -287,22 +339,43 @@ def build_trial_chunk(p: EscgParams, dom: jax.Array,
             def one(grid, key):
                 q, r = divmod(n_mcs, k_group)
                 kept = att = jnp.int32(0)
-                parts = []
+                parts, row_parts = [], []
+                held = (pipe.grid_values(grid) if pipe is not None
+                        else None)
                 if q:
                     def body(carry, _):
-                        g, k, kept, att = carry
+                        g, k, kept, att, held = carry
                         g, k, cnts, k2, a2 = multi(g, k, k_group)
-                        return (g, k, kept + k2, att + a2), cnts
-                    (grid, key, kept, att), cnts_q = jax.lax.scan(
-                        body, (grid, key, kept, att), length=q)
+                        rows = (jax.vmap(lambda c: pipe.row_held(c, held))(
+                            cnts) if pipe is not None else jnp.int32(0))
+                        if pipe is not None:
+                            held = pipe.grid_values(g)
+                        return (g, k, kept + k2, att + a2, held), (cnts,
+                                                                   rows)
+                    (grid, key, kept, att, held), (cnts_q, rows_q) = \
+                        jax.lax.scan(body, (grid, key, kept, att, held),
+                                     length=q)
                     parts.append(cnts_q.reshape(q * k_group, s + 1))
+                    if pipe is not None:
+                        row_parts.append(rows_q.reshape(q * k_group,
+                                                        pipe.width))
                 if r:
                     grid, key, cnts_r, k2, a2 = multi(grid, key, r)
                     kept, att = kept + k2, att + a2
                     parts.append(cnts_r)
+                    if pipe is not None:
+                        row_parts.append(jax.vmap(
+                            lambda c: pipe.row_held(c, held))(cnts_r))
                 cnts = jnp.concatenate(parts, axis=0)
-                return grid, key, cnts[-1], cnts[:, 1:] > 0, kept, att
-            return jax.vmap(one)(grids, keys)
+                out = (grid, key, cnts[-1], cnts[:, 1:] > 0, kept, att)
+                if pipe is not None:
+                    out += (jnp.concatenate(row_parts, axis=0),)
+                return out
+            out = jax.vmap(one)(grids, keys)
+            if pipe is not None:
+                # per-trial (n, n_mcs, W) -> ring layout (n_mcs, n, W)
+                out = out[:6] + (jnp.moveaxis(out[6], 0, 1),)
+            return out
 
         return chunk
 
@@ -314,13 +387,48 @@ def build_trial_chunk(p: EscgParams, dom: jax.Array,
                 k, k1 = jax.random.split(k)
                 g, k2, a2 = one_mcs(g, k1)
                 cnt = metrics.counts(g, s)
-                return (g, k, kept + k2, att + a2), cnt
-            (g, k, kept, att), cnts = jax.lax.scan(
+                row = (pipe.row(g, cnt) if pipe is not None
+                       else jnp.int32(0))
+                return (g, k, kept + k2, att + a2), (cnt, row)
+            (g, k, kept, att), (cnts, rows) = jax.lax.scan(
                 body, (grid, key, jnp.int32(0), jnp.int32(0)), length=n_mcs)
-            return g, k, cnts[-1], cnts[:, 1:] > 0, kept, att
-        return jax.vmap(one)(grids, keys)
+            out = (g, k, cnts[-1], cnts[:, 1:] > 0, kept, att)
+            if pipe is not None:
+                out += (rows,)
+            return out
+        out = jax.vmap(one)(grids, keys)
+        if pipe is not None:
+            out = out[:6] + (jnp.moveaxis(out[6], 0, 1),)
+        return out
 
     return chunk
+
+
+def build_trial_obs_chunk(p: EscgParams, dom: jax.Array,
+                          built: Optional[engines.BuiltEngine] = None):
+    """Observable-pipeline trial chunk (DESIGN.md §11): ``chunk(grids,
+    keys, ring, pos, n_mcs<static>) -> (grids, keys, ring, pos,
+    final_counts, alive, kept, attempts)``; returns ``(chunk, pipeline)``.
+
+    The banked per-MCS rows are copied into the device-resident ring
+    buffer (shape ``(capacity, n_pad, obs_width)``) inside the jitted
+    chunk — the host never sees a per-MCS transfer; ``run_trials``
+    flushes the ring once per *consumed* chunk on the same speculative
+    double-buffered stream as the alive-masks. Capacity below the chunk
+    length drops the oldest rows (documented lossy wraparound; the
+    stasis/extinction statistics stream from ``alive``, not the ring).
+    """
+    pipe = obs_mod.build_pipeline(p)
+    inner = build_trial_chunk(p, dom, built=built, pipe=pipe)
+
+    @partial(jax.jit, static_argnames=("n_mcs",))
+    def chunk(grids, keys, ring, pos, n_mcs: int):
+        grids, keys, cnts, alive, kept, att, rows = inner(grids, keys,
+                                                          n_mcs)
+        ring, pos = obs_mod.ring_push_many(ring, pos, rows)
+        return grids, keys, ring, pos, cnts, alive, kept, att
+
+    return chunk, pipe
 
 
 def _first_true_mcs(mask: np.ndarray, offset: int) -> np.ndarray:
@@ -340,15 +448,20 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
                stop_on_stasis: bool = True,
                hooks: Sequence[Callable[[int, np.ndarray], None]] = (),
                async_stats: bool = True,
-               engine_config=None, run_config=None,
+               engine_config=None, run_config=None, *,
+               engine=None, run=None,
                ) -> TrialResult:
     """Run ``n_trials`` IID simulations, vmapped and device-sharded.
 
-    ``params`` is either the legacy flat ``EscgParams`` or a ``Scenario``
-    (DESIGN.md §10): with a ``Scenario``, ``engine_config`` /
-    ``run_config`` select the engine and run control, and ``dom=None``
-    derives the dominance network from the scenario registry instead of
-    the circulant default.
+    Scenario-first signature (DESIGN.md §10): ``run_trials(scenario,
+    n_trials=..., engine=EngineConfig(...), run=RunConfig(...))`` — the
+    primary positional argument is a ``Scenario``; ``dom=None`` derives
+    the dominance network from the scenario registry, and the scenario's
+    declared observables stream through the device ring buffer
+    (DESIGN.md §11) unless ``run.observables`` pins the set. The legacy
+    flat form ``run_trials(params, dom, ...)`` still works behind a
+    ``DeprecationWarning`` (``engine_config=``/``run_config=`` are the
+    equally-deprecated spellings of ``engine=``/``run=``).
 
     The batch is padded to a multiple of the pod width (``trial_devices``,
     default: all local devices), placed with the trial axis sharded across
@@ -383,8 +496,19 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
 
     Bit-identical for any ``trial_devices`` and any padding: per-trial
     PRNG keys are ``fold_in(key, trial_index)``.
+
+    With ``params.observables`` non-empty the per-MCS observable rows of
+    every (padded) trial are banked into a device ring buffer inside each
+    chunk and flushed once per CONSUMED chunk — the speculative in-flight
+    chunk dropped by a stasis early-exit is never flushed, so the
+    observable streams are flush-schedule invariant (identical for
+    ``async_stats`` True/False and any chunk length, capacity
+    permitting).
     """
     from .scenarios import resolve_config  # lazy: scenarios imports core
+    from .simulation import _resolve_call_form  # lazy: avoid cycle
+    engine_config, run_config = _resolve_call_form(
+        "run_trials", params, engine_config, run_config, engine, run)
     params, dom = resolve_config(params, dom, engine_config, run_config)
     p = params.validate()
     spec = engines.get_engine(p.engine)
@@ -434,14 +558,33 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
         grids, keys = trial_grids_and_keys(
             p, key, n_pad, sharding=built.key_sharding,
             grid_sharding=built.batch_sharding)
-        chunk_fn = build_trial_chunk(p, dom_j, built=built)
+        pod_mesh = built.key_sharding.mesh
+        if p.observables:
+            chunk_fn, pipe = build_trial_obs_chunk(p, dom_j, built=built)
+        else:
+            chunk_fn = build_trial_chunk(p, dom_j, built=built)
     else:
         sharding = (pod_sharding(trial_devices) if spec.caps.trial_shardable
                     else pod_sharding(1))
         n_dev = sharding.mesh.devices.size
         n_pad = pad_trials(n_trials, n_dev)
         grids, keys = trial_grids_and_keys(p, key, n_pad, sharding)
-        chunk_fn = build_trial_chunk(p, dom_j)
+        pod_mesh = sharding.mesh
+        if p.observables:
+            chunk_fn, pipe = build_trial_obs_chunk(p, dom_j)
+        else:
+            chunk_fn = build_trial_chunk(p, dom_j)
+
+    obs_on = bool(p.observables)
+    ring = pos = None
+    rows_all = []
+    if obs_on:
+        cap = obs_mod.ring_capacity(p, max(1, chunk_len))
+        ring, pos = obs_mod.ring_init(cap, (n_pad, pipe.width))
+        # ring rows shard with the trial axis — flushes stay device-local
+        # per pod group until the host copy
+        ring = jax.device_put(
+            ring, NamedSharding(pod_mesh, P(None, POD_AXIS)))
 
     s = p.species
     # species absent at initialization count as extinct at MCS 0
@@ -459,15 +602,26 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
     # speculatively dispatched successor already computes. On a stasis
     # early-exit the in-flight chunk is simply dropped — its outputs are
     # never read, so statistics and mcs_completed are schedule-independent.
+    def dispatch(grids, keys, ring, pos, m):
+        if obs_on:
+            return chunk_fn(grids, keys, ring, pos, m)
+        g, k, cnts, alive, kept, att = chunk_fn(grids, keys, m)
+        return g, k, None, None, cnts, alive, kept, att
+
     m = min(chunk_len, n_mcs)
-    out = chunk_fn(grids, keys, m) if n_mcs else None
+    out = dispatch(grids, keys, ring, pos, m) if n_mcs else None
     while out is not None:
-        grids, keys, cnts, alive, kept, att = out
+        grids, keys, ring, pos, cnts, alive, kept, att = out
         m_next = min(chunk_len, n_mcs - done - m)
-        out = (chunk_fn(grids, keys, m_next)
+        out = (dispatch(grids, keys, ring, pos, m_next)
                if m_next and async_stats else None)
 
         alive_h = np.asarray(alive)                  # (n_pad, m, S) bool
+        if obs_on:
+            # one flush per CONSUMED chunk (the in-flight speculative
+            # chunk past an early-exit is dropped unflushed)
+            rows_all.append(obs_mod.ring_flush(np.asarray(ring), done,
+                                               done + m))
         final_cnts = np.asarray(cnts)
         kept_tot += int(np.asarray(kept)[:n_trials].sum())
         att_tot += int(np.asarray(att)[:n_trials].sum())
@@ -484,8 +638,13 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
         if stop_on_stasis and (stasis[:n_trials] >= 0).all():
             break
         if m_next and out is None:                   # async_stats=False
-            out = chunk_fn(grids, keys, m_next)
+            out = dispatch(grids, keys, ring, pos, m_next)
         m = m_next
+
+    observables = {}
+    if obs_on and rows_all:
+        rows = np.concatenate(rows_all, axis=0)      # (T, n_pad, W)
+        observables = pipe.split(np.moveaxis(rows, 0, 1)[:n_trials])
 
     return TrialResult(
         survival=surv[:n_trials].astype(bool),
@@ -496,4 +655,5 @@ def run_trials(params: EscgParams, dom: Optional[np.ndarray] = None,
         kept_fraction=(kept_tot / att_tot) if att_tot else 1.0,
         n_trials=n_trials,
         n_devices=n_dev,
+        observables=observables,
     )

@@ -210,9 +210,13 @@ def run_trial_batch(params: EscgParams, dom: np.ndarray, n_trials: int,
         print(f"[escg]   chunk -> MCS {mcs_done}: {in_stasis}/{n_trials} "
               f"trials in stasis", flush=True)
 
+    # scenario-first call form (DESIGN.md §10): the resolved params split
+    # back into layers; the explicit run.observables tuple round-trips, so
+    # composing reproduces `params` exactly
+    sc, eng_cfg, run_cfg = scenarios.decompose(params)
     t0 = time.time()
-    res = run_trials(params, dom, n_trials, trial_devices=trial_devices,
-                     hooks=[progress])
+    res = run_trials(sc, dom, n_trials, trial_devices=trial_devices,
+                     hooks=[progress], engine=eng_cfg, run=run_cfg)
     dt = time.time() - t0
 
     upd = res.mcs_completed * params.n_cells * n_trials
@@ -283,12 +287,15 @@ def build_parser() -> argparse.ArgumentParser:
 def scenario_setup(args, ap: argparse.ArgumentParser):
     """Resolve ``--scenario``: (validated EscgParams, dominance matrix).
     Physics come from the registry preset, overridden by explicitly-passed
-    scenario flags; engine/run control from the remaining CLI flags."""
+    scenario flags; engine/run control from the remaining CLI flags.
+    Resolution goes through ``scenarios.resolve_config``, so the preset's
+    ``ScenarioCaps.observables`` stream by default (DESIGN.md §11) unless
+    ``--observables`` pins the set ('none' disables)."""
     sc = scenarios.scenario_from_cli(args, ap)
-    params = scenarios.compose(
-        sc, scenarios.engine_config_from_args(args),
+    params, dom = scenarios.resolve_config(
+        sc, None, scenarios.engine_config_from_args(args),
         scenarios.run_config_from_args(args))
-    return sc, params, sc.dominance()
+    return sc, params, dom
 
 
 def main() -> None:
@@ -375,8 +382,26 @@ def main() -> None:
                                      start_mcs + mcs_done)
         hooks.append(snap_hook)
 
+    if params.print_frequency > 0:
+        # periodic density print (paper printFrequency). The per-MCS rows
+        # arrive once per chunk — flushed from the device observable ring
+        # when the pipeline is on (DESIGN.md §11) — so printing any
+        # interval costs zero extra host transfers.
+        pf, n_cells = params.print_frequency, params.n_cells
+
+        def density_hook(mcs_done, grid, cnts):
+            first = mcs_done - len(cnts) + 1
+            for i in range((-first % pf), len(cnts), pf):
+                print(f"[escg] MCS {start_mcs + first + i}: densities "
+                      f"{np.round(cnts[i] / n_cells, 4)}", flush=True)
+        hooks.append(density_hook)
+
+    # scenario-first call form (DESIGN.md §10); decompose round-trips the
+    # resolved params exactly, observables included
+    sc_run, eng_cfg, run_cfg = scenarios.decompose(params)
     t0 = time.time()
-    res = simulate(params, dom, grid0=grid0, key=key, hooks=hooks)
+    res = simulate(sc_run, dom, grid0=grid0, key=key, hooks=hooks,
+                   engine=eng_cfg, run=run_cfg)
     dt = time.time() - t0
 
     n = params.n_cells

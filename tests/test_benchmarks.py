@@ -98,31 +98,53 @@ def test_time_stats_true_median(monkeypatch):
 # ------------------- gate schema + trajectory compare ---------------------- #
 
 def _gate_doc():
-    """A minimal schema-valid v3 document covering every required local
-    kernel and scenario."""
+    """A minimal schema-valid v4 document covering every required local
+    kernel and scenario, plus one observable-overhead pair."""
     from benchmarks import bench_gate as bg
 
-    def row(kernel, scenario):
+    def row(kernel, scenario, observables=False):
+        suffix = "_obs" if observables else ""
         return {
-            "name": f"kernelgate_{scenario}_sublattice_{kernel}",
+            "name": f"kernelgate_{scenario}_sublattice_{kernel}{suffix}",
             "us_per_call": 100.0, "derived": "1.0 Mupd/s",
             "family": "sublattice", "scenario": scenario,
             "local_kernel": kernel, "engine": "sublattice",
-            "backend": "cpu", "lattice": [16, 32], "mcs": 2,
+            "backend": "cpu", "observables": observables,
+            "lattice": [16, 32], "mcs": 2,
             "n_trials": 0, "n_pad": 0, "updates_per_s": 1e6,
             "timing": {"median_us": 100.0, "mean_us": 110.0,
                        "min_us": 90.0, "max_us": 140.0, "n": 3},
         }
     rows = [row(k, bg.SCENARIOS[0]) for k in bg.LOCAL_KERNELS]
     rows += [row("jnp", sc) for sc in bg.SCENARIOS[1:]]
+    rows += [row("jnp", bg.SCENARIOS[0], observables=True)]
     return {"schema": bg.SCHEMA, "backend": "cpu", "devices": 1,
             "smoke": True, "unix_time": 1700000000, "rows": rows}
 
 
-def test_gate_document_schema_v3():
+def test_gate_document_schema_v4():
     from benchmarks import bench_gate as bg
     doc = _gate_doc()
     assert bg.validate_gate_document(doc) == []
+    # v4 rows must declare whether the observable pipeline ran
+    bad = copy.deepcopy(doc)
+    del bad["rows"][0]["observables"]
+    assert any("observables" in e for e in bg.validate_gate_document(bad))
+    # ...and the flag is part of the trajectory identity: an obs-on row
+    # never gates against its off twin
+    on = next(r for r in doc["rows"] if r["observables"])
+    off = next(r for r in doc["rows"] if not r["observables"]
+               and r["local_kernel"] == on["local_kernel"]
+               and r["scenario"] == on["scenario"])
+    assert bg.row_key(on) != bg.row_key(off)
+    # older v3 history entries (no observables field) still validate when
+    # the caller accepts historical schemas, but not as a fresh document
+    v3 = copy.deepcopy(doc)
+    v3["schema"] = bg.SCHEMA_V3
+    for r in v3["rows"]:
+        r.pop("observables", None)
+    assert bg.validate_gate_document(v3, accept=bg.KNOWN_SCHEMAS) == []
+    assert bg.validate_gate_document(v3)
     # v3 rows must separate requested trials from the padded batch
     bad = copy.deepcopy(doc)
     bad["rows"][0]["n_pad"] = -1

@@ -1,0 +1,384 @@
+"""On-device observable pipelines (DESIGN.md §11): registry rails, ring
+buffer semantics, obs-on/off bit-identity across the engine registry, the
+shard_map density-count path, flush-schedule invariance and the unified
+``RunResult`` protocol.
+
+The central contract under test: every registered observable is a pure
+grid/counts read evaluated inside the jitted chunk — it consumes no PRNG
+state and never transfers per-MCS data to the host — so turning the
+pipeline on or off leaves every trajectory bit-identical, for every
+``(engine, local_kernel)`` pair the registry admits (including the
+``k_mcs`` megakernel path, where grid-derived observables lag-hold at
+launch-group boundaries).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EscgParams, dominance as dm, engines, simulate
+from repro.core import observables as obs
+from repro.core.results import (RunResult, decode_observables,
+                                encode_observables)
+from repro.core.scenarios import (EngineConfig, RunConfig, make_scenario,
+                                  scenario_observables)
+from repro.core.simulation import SimResult
+from repro.core.trials import TrialResult, run_trials
+
+pytestmark = pytest.mark.composed   # re-run by the CI 8-fake-device job
+
+H, W, TILE, SPECIES, N_MCS = 16, 32, (8, 16), 5, 6
+OBS_ALL = obs.observable_names()
+
+
+def _params(name: str, **overrides) -> EscgParams:
+    kw = dict(length=W, height=H, species=SPECIES, mobility=1e-3,
+              empty=0.1, seed=5, engine=name, tile=TILE, mcs=N_MCS,
+              chunk_mcs=N_MCS)
+    kw.update(overrides)
+    return EscgParams(**kw).validate()
+
+
+def _engine_kernel_pairs():
+    return [(spec.name, lk)
+            for spec in engines.engine_specs()
+            for lk in (spec.caps.local_kernels or ("jnp",))]
+
+
+def _dom():
+    return dm.circulant(SPECIES, (1, 2))
+
+
+# ------------------------------- registry ---------------------------------- #
+
+def test_registry_contents_and_widths():
+    assert set(OBS_ALL) == {"densities", "interface_length",
+                            "cluster_size", "snapshot"}
+    p = _params("batched", observables=OBS_ALL)
+    widths = {s.name: s.width(p) for s in obs.observable_specs()}
+    assert widths["densities"] == SPECIES + 1
+    assert widths["interface_length"] == widths["cluster_size"] == 1
+    assert widths["snapshot"] == 8 * 8      # min(8, H) * min(8, W)
+    pipe = obs.build_pipeline(p)
+    assert pipe.width == sum(widths.values())
+
+
+def test_unknown_observable_rejected():
+    with pytest.raises(ValueError, match="unknown observable"):
+        obs.get_observable("nope")
+    with pytest.raises(ValueError, match="unknown observable"):
+        _params("batched", observables=("nope",))
+
+
+def test_negative_capacity_rejected():
+    with pytest.raises(ValueError, match="obs_capacity"):
+        _params("batched", observables=("densities",), obs_capacity=-1)
+
+
+def test_every_engine_gets_the_generic_observe_hook():
+    """EngineCaps rails (DESIGN.md §11): the full registry is legal on
+    every engine family, and ``engines.build`` attaches a non-None
+    ``observe`` hook exactly when observables are requested."""
+    dom_j = jnp.asarray(_dom(), jnp.float32)
+    for name, lk in _engine_kernel_pairs():
+        p_on = _params(name, local_kernel=lk, observables=OBS_ALL)
+        p_off = _params(name, local_kernel=lk)
+        assert engines.build(p_on, dom_j).observe is not None
+        assert engines.build(p_off, dom_j).observe is None
+
+
+# ---------------------------- numeric oracles ------------------------------ #
+
+def test_observable_rows_match_numpy_oracles():
+    """Each registered observable against an independent numpy
+    implementation on a random lattice (raw device row + host post)."""
+    p = _params("batched", observables=OBS_ALL)
+    pipe = obs.build_pipeline(p)
+    g_np = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(7), (H, W), 0, SPECIES + 1),
+        np.int32)
+    counts = np.bincount(g_np.ravel(), minlength=SPECIES + 1)
+    row = np.asarray(pipe.row(jnp.asarray(g_np), jnp.asarray(counts)))
+    streams = pipe.split(row[None])
+
+    n = H * W
+    np.testing.assert_allclose(streams["densities"][0], counts / n)
+    unlike = (np.sum(g_np != np.roll(g_np, -1, axis=1))
+              + np.sum(g_np != np.roll(g_np, -1, axis=0)))
+    np.testing.assert_allclose(streams["interface_length"][0, 0],
+                               unlike / (2.0 * n))
+    like = sum(np.sum((g_np == np.roll(g_np, -1, axis=ax))
+                      & (g_np > 0)) for ax in (1, 0))
+    np.testing.assert_allclose(streams["cluster_size"][0, 0],
+                               like / (2.0 * n))
+    snap = streams["snapshot"][0]
+    assert snap.shape == (8, 8)
+    bh, bw = H // 8, W // 8
+    block = g_np[:8 * bh, :8 * bw].reshape(8, bh, 8, bw)
+    hist = np.stack([(block == s).sum(axis=(1, 3))
+                     for s in range(SPECIES + 1)], axis=-1)
+    np.testing.assert_array_equal(snap, np.argmax(hist, axis=-1))
+
+
+# ------------------------------ ring buffer -------------------------------- #
+
+def test_ring_push_wraparound():
+    ring, pos = obs.ring_init(3, (2,))
+    for i in range(7):
+        ring, pos = obs.ring_push(ring, pos, jnp.full((2,), float(i)))
+    assert int(pos) == 7
+    # slots hold rows 4..6 at positions 4%3, 5%3, 6%3
+    np.testing.assert_array_equal(np.asarray(ring)[:, 0], [6.0, 4.0, 5.0])
+
+
+def test_ring_push_many_matches_single_pushes():
+    rows = jnp.arange(10, dtype=jnp.float32).reshape(5, 2)
+    ring_a, pos_a = obs.ring_init(4, (2,))
+    ring_a, pos_a = obs.ring_push_many(ring_a, pos_a, rows)
+    ring_b, pos_b = obs.ring_init(4, (2,))
+    for r in rows:
+        ring_b, pos_b = obs.ring_push(ring_b, pos_b, r)
+    assert int(pos_a) == int(pos_b) == 5
+    np.testing.assert_array_equal(np.asarray(ring_a), np.asarray(ring_b))
+
+
+def test_ring_flush_ordering_and_lossy_wraparound():
+    ring, pos = obs.ring_init(4, (1,))
+    for i in range(6):
+        ring, pos = obs.ring_push(ring, pos, jnp.full((1,), float(i)))
+    buf = np.asarray(ring)
+    # a window that fits returns rows in push order
+    np.testing.assert_array_equal(obs.ring_flush(buf, 2, 6)[:, 0],
+                                  [2, 3, 4, 5])
+    # a window wider than the capacity keeps only the newest rows
+    np.testing.assert_array_equal(obs.ring_flush(buf, 0, 6)[:, 0],
+                                  [2, 3, 4, 5])
+    # empty window
+    assert obs.ring_flush(buf, 6, 6).shape == (0, 1)
+
+
+def test_simulate_rejects_undersized_ring():
+    p = _params("batched", observables=("densities",), obs_capacity=2,
+                mcs=N_MCS, chunk_mcs=N_MCS)
+    with pytest.raises(ValueError, match="obs_capacity"):
+        simulate(p, _dom(), stop_on_stasis=False)
+
+
+# -------------------- bit-identity across the registry --------------------- #
+
+@pytest.mark.parametrize("name,local_kernel", _engine_kernel_pairs())
+def test_simulate_obs_on_off_bit_identity(name, local_kernel):
+    """The tentpole contract: streaming the full observable registry
+    leaves the dynamics bit-identical for every (engine, local_kernel)
+    pair — observe consumes no PRNG state, by construction."""
+    p_off = _params(name, local_kernel=local_kernel)
+    p_on = _params(name, local_kernel=local_kernel, observables=OBS_ALL)
+    r_off = simulate(p_off, _dom(), stop_on_stasis=False)
+    r_on = simulate(p_on, _dom(), stop_on_stasis=False)
+    np.testing.assert_array_equal(r_on.grid, r_off.grid)
+    np.testing.assert_array_equal(r_on.densities, r_off.densities)
+    assert r_on.mcs_completed == r_off.mcs_completed
+    # per-MCS cadence: densities carry the extra MCS-0 row (the legacy
+    # densities trace), grid-derived streams start at MCS 1
+    assert r_on.observables["densities"].shape[0] == N_MCS + 1
+    for nm in set(OBS_ALL) - {"densities"}:
+        assert r_on.observables[nm].shape[0] == N_MCS
+    assert set(r_off.observables) == {"densities"}
+
+
+@pytest.mark.parametrize("name,local_kernel,k_mcs", [
+    ("pallas_fused", "jnp", 3), ("sharded", "fused", 3),
+    ("sharded_pod", "fused", 2)])
+def test_k_mcs_obs_bit_identity_and_lag_hold(name, local_kernel, k_mcs):
+    """Megakernel launches bank per-MCS counts but hide intermediate
+    grids: count-derived observables keep per-MCS cadence, grid-derived
+    ones lag-hold at launch-group boundaries — dynamics stay
+    bit-identical obs on/off."""
+    kw = dict(local_kernel=local_kernel, k_mcs=k_mcs, mcs=N_MCS,
+              chunk_mcs=N_MCS)
+    r_off = simulate(_params(name, **kw), _dom(), stop_on_stasis=False)
+    r_on = simulate(_params(name, observables=OBS_ALL, **kw), _dom(),
+                    stop_on_stasis=False)
+    np.testing.assert_array_equal(r_on.grid, r_off.grid)
+    np.testing.assert_array_equal(r_on.densities, r_off.densities)
+    # densities stream from banked counts: exact per-MCS values
+    np.testing.assert_allclose(r_on.observables["densities"][1:],
+                               r_off.densities[1:])
+    # grid-derived streams repeat within each launch group (lag-hold)
+    iface = r_on.observables["interface_length"][:, 0]
+    assert len(iface) == N_MCS
+    for start in range(0, N_MCS - k_mcs + 1, k_mcs):
+        group = iface[start:start + k_mcs]
+        assert np.all(group == group[0])
+
+
+def test_obs_capacity_sweep_is_invariant():
+    """Any capacity >= the chunk length reconstructs the identical
+    streams (the ring is an implementation detail, not a window)."""
+    base = None
+    for cap in (0, N_MCS, N_MCS + 3, 4 * N_MCS):
+        p = _params("batched", observables=("densities",
+                                            "interface_length"),
+                    obs_capacity=cap)
+        r = simulate(p, _dom(), stop_on_stasis=False)
+        if base is None:
+            base = r.observables
+        else:
+            for nm, v in r.observables.items():
+                np.testing.assert_array_equal(v, base[nm])
+
+
+# ------------------------------ trial driver ------------------------------- #
+
+def test_run_trials_obs_on_off_and_flush_schedule_invariance():
+    """Trial statistics are bit-identical obs on/off, and the observable
+    streams are invariant to the flush schedule: chunk length and
+    async_stats change when/how the ring is flushed, never what it
+    holds."""
+    p_off = _params("batched", mcs=12, chunk_mcs=12)
+    r_off = run_trials(p_off, _dom(), n_trials=3, stop_on_stasis=False)
+    base = None
+    for chunk, async_stats in ((12, True), (4, True), (4, False),
+                               (5, True)):
+        p = _params("batched", observables=("densities",
+                                            "interface_length"),
+                    mcs=12, chunk_mcs=chunk)
+        r = run_trials(p, _dom(), n_trials=3, stop_on_stasis=False,
+                       async_stats=async_stats)
+        np.testing.assert_array_equal(r.survival, r_off.survival)
+        np.testing.assert_array_equal(r.densities, r_off.densities)
+        np.testing.assert_array_equal(r.stasis_mcs, r_off.stasis_mcs)
+        assert r.observables["densities"].shape == (3, 12, SPECIES + 1)
+        if base is None:
+            base = r.observables
+        else:
+            for nm, v in r.observables.items():
+                np.testing.assert_array_equal(v, base[nm],
+                                              err_msg=f"{nm} chunk={chunk} "
+                                                      f"async={async_stats}")
+
+
+def test_run_trials_obs_early_exit_truncates_streams():
+    """A stasis early-exit stops the stream at mcs_completed: the
+    speculative in-flight chunk is never flushed, and async/sync
+    schedules agree exactly."""
+    # S=2 cyclic: one species eats the other; an 8x8 lattice reaches
+    # stasis (<= 1 species alive) well before the MCS budget
+    kw = dict(length=8, height=8, species=2, mobility=1e-2, empty=0.0,
+              seed=3, engine="batched", mcs=2000, chunk_mcs=25,
+              observables=("densities",))
+    p = EscgParams(**kw).validate()
+    dom2 = dm.circulant(2, (1,))
+    r_async = run_trials(p, dom2, n_trials=2, stop_on_stasis=True,
+                         async_stats=True)
+    r_sync = run_trials(p, dom2, n_trials=2, stop_on_stasis=True,
+                        async_stats=False)
+    assert r_async.mcs_completed < 2000, "expected a stasis early-exit"
+    assert r_async.mcs_completed == r_sync.mcs_completed
+    assert (r_async.observables["densities"].shape
+            == (2, r_async.mcs_completed, 3))
+    np.testing.assert_array_equal(r_async.observables["densities"],
+                                  r_sync.observables["densities"])
+    np.testing.assert_array_equal(r_async.stasis_mcs, r_sync.stasis_mcs)
+
+
+# ---------------------- sharded density-count path ------------------------- #
+
+def test_density_counts_sharded_matches_ref_on_8_devices(subproc):
+    """kernels.density_counts under shard_map + psum on a 2x4 mesh is
+    bit-identical to the bincount oracle on the gathered lattice."""
+    subproc("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.kernels.density import density_counts_sharded
+        from repro.kernels.ref import density_ref
+        assert jax.device_count() == 8
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                    ("rows", "cols"))
+        grid = jax.random.randint(jax.random.PRNGKey(0), (16, 32), 0, 6,
+                                  dtype=jnp.int32)
+        grid = jax.device_put(grid, NamedSharding(mesh, P("rows", "cols")))
+        got = jax.jit(lambda g: density_counts_sharded(
+            g, 5, mesh, interpret=True))(grid)
+        want = density_ref(np.asarray(grid), 5)
+        np.testing.assert_array_equal(np.asarray(got), want)
+        print("OK")
+        """, 8)
+
+
+# --------------------------- scenario integration -------------------------- #
+
+def test_scenario_observables_intersects_registry():
+    assert scenario_observables("park3") == ("densities",
+                                             "interface_length")
+    # caps also declare result-level statistics that are NOT streaming
+    # observables — they must never leak into the pipeline selection
+    for name in ("zhong_density", "nspecies5"):
+        for nm in scenario_observables(name):
+            assert nm in OBS_ALL
+    assert scenario_observables("no_such_scenario") == ()
+
+
+def test_scenario_first_autofill_and_explicit_off():
+    sc = make_scenario("park3")
+    eng = EngineConfig(engine="batched")
+    run = RunConfig(length=W, height=H, mcs=N_MCS, chunk_mcs=N_MCS, seed=2)
+    r_auto = simulate(sc, engine=eng, run=run, stop_on_stasis=False)
+    assert set(r_auto.observables) == {"densities", "interface_length"}
+    r_off = simulate(sc, engine=eng, run=run.replace(observables=()),
+                     stop_on_stasis=False)
+    assert set(r_off.observables) == {"densities"}
+    np.testing.assert_array_equal(r_auto.grid, r_off.grid)
+
+
+def test_legacy_positional_params_deprecated():
+    p = _params("batched")
+    with pytest.warns(DeprecationWarning, match="[Ss]cenario"):
+        simulate(p, _dom(), stop_on_stasis=False)
+    with pytest.warns(DeprecationWarning, match="[Ss]cenario"):
+        run_trials(p, _dom(), n_trials=1, stop_on_stasis=False)
+    sc = make_scenario("park3")
+    with pytest.raises(TypeError):
+        simulate(sc, engine_config=EngineConfig(),
+                 engine=EngineConfig(), stop_on_stasis=False)
+
+
+# ----------------------------- RunResult API ------------------------------- #
+
+def test_runresult_protocol_and_json_round_trip():
+    p = _params("batched", observables=("densities", "snapshot"))
+    res = simulate(p, _dom(), stop_on_stasis=False)
+    tr = run_trials(p, _dom(), n_trials=2, stop_on_stasis=False)
+    for r in (res, tr):
+        assert isinstance(r, RunResult)
+        assert r.mcs_completed == N_MCS
+        assert set(r.observables) >= {"densities", "snapshot"}
+
+    back = SimResult.from_json(res.to_json())
+    np.testing.assert_array_equal(back.grid, res.grid)
+    assert back.grid.dtype == res.grid.dtype
+    for nm, v in res.observables.items():
+        np.testing.assert_array_equal(back.observables[nm], v)
+        assert back.observables[nm].dtype == v.dtype
+    np.testing.assert_array_equal(back.densities, res.densities)
+
+    tback = TrialResult.from_json(tr.to_json())
+    for nm, v in tr.observables.items():
+        np.testing.assert_array_equal(tback.observables[nm], v)
+    np.testing.assert_array_equal(tback.survival, tr.survival)
+    # pre-observables documents still load (the field defaults empty)
+    d = json.loads(tr.to_json())
+    del d["observables"]
+    legacy = TrialResult.from_json(json.dumps(d))
+    assert legacy.observables == {}
+
+
+def test_encode_decode_observables_inverse():
+    payload = {"a": np.arange(6, dtype=np.float64).reshape(2, 3),
+               "b": np.zeros((0, 1), np.float32)}
+    back = decode_observables(encode_observables(payload))
+    for nm, v in payload.items():
+        np.testing.assert_array_equal(back[nm], v)
+        assert back[nm].dtype == v.dtype
