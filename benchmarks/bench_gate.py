@@ -17,7 +17,7 @@ functions below (also exposed as ``--validate FILE...`` for CI):
 
 * a *row* must carry ``name`` (non-empty str), ``us_per_call`` (number
   > 0) and ``derived`` (str);
-* the *document* must carry ``schema == "escg-bench-kernels/v4"``,
+* the *document* must carry ``schema == "escg-bench-kernels/v5"``,
   ``backend``/``devices``/``smoke`` metadata and a non-empty ``rows``
   list whose entries extend the row schema with ``family``,
   ``scenario`` (the registered scenario-layer preset the cell ran,
@@ -35,6 +35,14 @@ functions below (also exposed as ``--validate FILE...`` for CI):
   cover ALL three local kernels AND all three swept scenarios {park3,
   zhong_density, nspecies5} (the acceptance criterion; a sweep that
   silently drops one fails validation, not review).
+
+New in v5: the document additionally carries one family-``serve``
+derived row — the serving layer (DESIGN.md §12) replays the committed
+smoke trace (``examples/traces/smoke.jsonl``) through an in-process
+``ScenarioServer`` and records requests/s, useful-update throughput
+and the compiled-engine cache counters (``validate_serve_row``; the
+row rides the same ``--history`` trajectory as the kernel rows, and a
+v5 document without one fails validation).
 
 The v4 sweep records *observable overhead* as paired rows: every
 engine family runs park3/jnp twice, once with the observable pipeline
@@ -76,12 +84,17 @@ if os.environ.get("ESCG_FAKE_DEVICES"):
         + " --xla_force_host_platform_device_count="
         + os.environ["ESCG_FAKE_DEVICES"])
 
-SCHEMA = "escg-bench-kernels/v4"
+SCHEMA = "escg-bench-kernels/v5"
+SCHEMA_V4 = "escg-bench-kernels/v4"
 SCHEMA_V3 = "escg-bench-kernels/v3"
 # history lines from older gate versions stay valid against the schema
 # they were written under (the trajectory spans schema bumps); fresh
 # documents and compare baselines must carry the CURRENT schema
-KNOWN_SCHEMAS = (SCHEMA_V3, SCHEMA)
+KNOWN_SCHEMAS = (SCHEMA_V3, SCHEMA_V4, SCHEMA)
+# v5: the document additionally carries >= 1 family-"serve" derived row —
+# serving throughput under the smoke trace (requests/s and Mupd/s from
+# repro.serve.loadgen.gate_row) riding the same --history trajectory
+SERVE_FAMILY = "serve"
 FAMILIES = ("sublattice", "sharded", "sharded_pod")
 LOCAL_KERNELS = ("jnp", "pallas", "fused")
 # scenario-layer sweep (v2): park3 carries the full kernel x family grid;
@@ -126,8 +139,43 @@ def validate_row(obj, ctx: str = "row") -> List[str]:
 TIMING_FIELDS = ("median_us", "mean_us", "min_us", "max_us", "n")
 
 
+def validate_serve_row(obj, ctx: str = "row") -> List[str]:
+    """A family-``serve`` derived row (v5): serving throughput of a trace
+    replay, not a kernel timing — no lattice/timing block, instead the
+    request counters the serve-smoke CI job gates on."""
+    errors = validate_row(obj, ctx)
+    if not isinstance(obj, dict):
+        return errors
+    for fld in ("scenario", "local_kernel", "engine", "backend"):
+        _check(obj, fld, str, errors, ctx)
+    _check(obj, "observables", bool, errors, ctx)
+    _check(obj, "n_requests", int, errors, ctx)
+    _check(obj, "requests_per_s", (int, float), errors, ctx)
+    _check(obj, "updates_per_s", (int, float), errors, ctx)
+    _check(obj, "cache_hits", int, errors, ctx)
+    _check(obj, "cache_misses", int, errors, ctx)
+    _check(obj, "dropped", int, errors, ctx)
+    if errors:
+        return errors
+    if obj["n_requests"] < 1:
+        errors.append(f"{ctx}: serve row n_requests must be >= 1")
+    if obj["requests_per_s"] <= 0 or obj["updates_per_s"] <= 0:
+        errors.append(f"{ctx}: serve row throughput must be positive")
+    if obj["cache_hits"] < 0 or obj["cache_misses"] < 0:
+        errors.append(f"{ctx}: serve row cache counters must be >= 0")
+    if obj["dropped"] != 0:
+        errors.append(f"{ctx}: serve row dropped={obj['dropped']} — every "
+                      "admitted request must be answered")
+    return errors
+
+
 def validate_gate_row(obj, ctx: str = "row",
                       schema: str = SCHEMA) -> List[str]:
+    if isinstance(obj, dict) and obj.get("family") == SERVE_FAMILY:
+        if schema in (SCHEMA_V3, SCHEMA_V4):
+            return [f"{ctx}: family 'serve' rows require schema {SCHEMA} "
+                    f"(document declares {schema})"]
+        return validate_serve_row(obj, ctx)
     errors = validate_row(obj, ctx)
     if not isinstance(obj, dict):
         return errors
@@ -212,6 +260,12 @@ def validate_gate_document(doc, accept=(SCHEMA,)) -> List[str]:
             errors.append(f"document: rows cover {fld}s {sorted(covered)} "
                           f"— missing {sorted(missing)} (all of {want} "
                           "are required)")
+    if schema == SCHEMA and not any(
+            isinstance(r, dict) and r.get("family") == SERVE_FAMILY
+            for r in doc["rows"]):
+        errors.append(f"document: {SCHEMA} requires at least one "
+                      "family-'serve' derived row (serving throughput "
+                      "under the smoke trace)")
     return errors
 
 
@@ -442,6 +496,33 @@ def _bench_combo(family: str, kernel: str, scenario: str, mcs: int,
     }
 
 
+SMOKE_TRACE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "examples", "traces", "smoke.jsonl")
+
+
+def _serve_row() -> dict:
+    """The v5 ``serve_throughput`` derived row: replay the committed
+    smoke trace (synthetic fallback) through an in-process
+    ``ScenarioServer`` and reshape the report via ``loadgen.gate_row`` —
+    serving throughput rides the same trajectory as the kernel rows."""
+    from repro.serve import loadgen
+    from repro.serve.server import ScenarioServer
+
+    from .common import note
+
+    reqs = (loadgen.read_trace(SMOKE_TRACE) if os.path.exists(SMOKE_TRACE)
+            else loadgen.synthetic_trace(10, 0))
+    report = loadgen.replay(ScenarioServer(), reqs, waves=2)
+    problems = loadgen.check_report(report)
+    if problems:
+        raise SystemExit("bench_gate serve replay failed its acceptance "
+                         "checks:\n" + "\n".join(problems))
+    note(f"serve: {report['n_requests']} requests "
+         f"{report['requests_per_s']:.2f} req/s, cache "
+         f"{report['cache']['hits']}H/{report['cache']['misses']}M")
+    return loadgen.gate_row(report)
+
+
 def run(out_path: Optional[str] = None) -> dict:
     import jax
 
@@ -480,6 +561,9 @@ def run(out_path: Optional[str] = None) -> dict:
                  f"{row['updates_per_s']:.0f} upd/s)")
         rows.append(row)
         emit(row["name"], row["us_per_call"] / 1e6, row["derived"])
+    rows.append(_serve_row())
+    emit(rows[-1]["name"], rows[-1]["us_per_call"] / 1e6,
+         rows[-1]["derived"])
     doc = {
         "schema": SCHEMA,
         "backend": jax.default_backend(),

@@ -29,6 +29,7 @@ families resolve by name suffix: ``make_scenario("nspecies7")`` is the
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import inspect
 import json
 import re
@@ -44,7 +45,8 @@ from .params import EscgParams, parse_observables
 __all__ = [
     "Scenario", "ScenarioCaps", "ScenarioSpec", "EngineConfig", "RunConfig",
     "register_scenario", "scenario_names", "scenario_specs", "get_scenario",
-    "make_scenario", "compose", "decompose", "resolve_config",
+    "make_scenario", "scenario_key", "compose", "decompose",
+    "resolve_config",
     "scenario_from_cli", "engine_config_from_args", "run_config_from_args",
     "SCENARIO_CLI_FIELDS",
 ]
@@ -83,6 +85,13 @@ class Scenario:
     # preset-specific knobs (e.g. Park's alpha/beta/gamma), stored sorted
     # so equal scenarios compare equal
     extras: Tuple[Tuple[str, float], ...] = ()
+
+    def __post_init__(self):
+        # normalize extras in the constructor itself: a dict (arbitrary
+        # iteration order) or an unsorted tuple would otherwise produce a
+        # Scenario that compares unequal to — and content-hashes
+        # differently from (scenario_key) — the same physics built sorted.
+        object.__setattr__(self, "extras", _freeze_extras(self.extras))
 
     @property
     def flux(self) -> bool:
@@ -415,6 +424,25 @@ def resolve_config(params: Union[EscgParams, Scenario],
             "engine_config/run_config only apply when the first argument "
             "is a Scenario; an EscgParams already carries both layers")
     return params, dom
+
+
+def scenario_key(scenario: Scenario) -> str:
+    """Stable content hash of a scenario's physics (DESIGN.md §12).
+
+    The serving layer's compiled-engine cache keys on this: two requests
+    share a compiled program only when every physics field — species,
+    neighbourhood, rates, boundary, init occupancy, preset extras, and
+    the registry name the dominance network derives from — is identical.
+    The hash is canonical-JSON (sorted keys, normalized extras) over the
+    dataclass fields, so it is reproducible across processes and Python
+    hash seeds; never Python ``hash()`` (PYTHONHASHSEED-dependent).
+    Floats serialize via ``repr`` (shortest round-trip), so equal values
+    hash equal on every platform JAX supports."""
+    d = dataclasses.asdict(scenario)
+    # asdict keeps the (already sorted — Scenario.__post_init__) extras
+    # tuple; JSON encodes it as nested lists, canonically
+    payload = json.dumps(d, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(payload.encode("utf-8")).hexdigest()[:16]
 
 
 def scenario_observables(name: str) -> Tuple[str, ...]:

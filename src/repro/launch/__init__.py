@@ -1,2 +1,5 @@
-# Launchers: mesh.py, dryrun.py, train.py, serve.py, escg_run.py.
+# ESCG entry points: escg_run.py (CLI driver/matrix), serve.py
+# (escg_serve scenario server, DESIGN.md §12).
+# LM-scaffold appendix (DESIGN.md §9, quarantined): mesh.py, dryrun.py,
+# train.py — not ESCG entry points.
 # NOTE: dryrun must be imported/run as __main__ only (it sets XLA_FLAGS).

@@ -1,64 +1,107 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens
-(deliverable b; greedy decoding on synthetic prompts)."""
+"""``escg_serve`` — the ESCG scenario-serving entry point (DESIGN.md §12).
+
+Replay a JSONL request trace (or a synthetic smoke mix) through an
+in-process :class:`~repro.serve.server.ScenarioServer` and emit the
+throughput/latency report, or expose the same server over the stdlib
+HTTP adapter with ``--http``.
+
+Examples::
+
+    escg_serve --synthetic 10 --waves 2 --report report.json
+    escg_serve --trace examples/traces/smoke.jsonl --check
+    escg_serve --http --port 8787        # POST /submit, /drain, ...
+
+(The LM-framework scaffold that previously lived here — a granite
+prefill/decode driver — was retired in favour of this; see DESIGN.md §9
+for what remains quarantined of that scaffold.)
+"""
 from __future__ import annotations
 
 import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-
-from ..configs import get_arch
-from ..configs.base import ShapeConfig
-from ..data.synthetic import batch_for_model
-from ..models.registry import build_model
+import json
+import sys
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", type=str, default="granite-3-8b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt_len", type=int, default=64)
-    ap.add_argument("--gen_len", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="escg_serve",
+        description="ESCG scenario server: replay request traces against "
+                    "the continuously-batched in-process server, or "
+                    "serve HTTP (DESIGN.md §12)")
+    src = ap.add_mutually_exclusive_group()
+    src.add_argument("--trace", type=str, default=None,
+                     help="JSONL trace of SimRequest wire objects")
+    src.add_argument("--synthetic", type=int, default=None, metavar="N",
+                     help="generate an N-request synthetic smoke trace")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for --synthetic (default 0)")
+    ap.add_argument("--waves", type=int, default=2,
+                    help="trace replay waves; later waves exercise the "
+                         "compiled-engine cache-hit path (default 2)")
+    ap.add_argument("--maxBatchTrials", type=int, default=64,
+                    help="trials packed per device batch (default 64)")
+    ap.add_argument("--cacheEntries", type=int, default=8,
+                    help="LRU compiled-engine cache entries (default 8)")
+    ap.add_argument("--report", type=str, default=None,
+                    help="write the replay report JSON here")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero unless the report passes the "
+                         "acceptance checks (zero dropped, zero errors, "
+                         ">=1 cache hit)")
+    ap.add_argument("--emitTrace", type=str, default=None, metavar="PATH",
+                    help="write the (synthetic) trace to PATH and exit")
+    ap.add_argument("--http", action="store_true",
+                    help="serve the HTTP adapter instead of replaying")
+    ap.add_argument("--host", type=str, default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8787)
+    return ap
 
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.gen_len
 
-    shape = ShapeConfig("serve", args.prompt_len, args.batch, "prefill")
-    batch = batch_for_model(model, shape, 0, args.seed)
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    from repro.serve import loadgen
+    from repro.serve.server import ScenarioServer
 
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    if args.emitTrace is not None:
+        reqs = loadgen.synthetic_trace(args.synthetic or 10, args.seed)
+        loadgen.write_trace(args.emitTrace, reqs)
+        print(f"wrote {len(reqs)} requests to {args.emitTrace}")
+        return 0
 
-    t0 = time.time()
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    t_prefill = time.time() - t0
+    server = ScenarioServer(max_batch_trials=args.maxBatchTrials,
+                            cache_entries=args.cacheEntries)
 
-    out = [tok]
-    t0 = time.time()
-    for _ in range(args.gen_len - 1):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    if args.http:
+        from repro.serve.httpd import serve_http
+        print(f"escg_serve: HTTP on {args.host}:{args.port} "
+              "(POST /submit, /drain; GET /response, /accounting)")
+        serve_http(server, args.host, args.port)
+        return 0
 
-    seqs = jnp.stack(out, axis=1)
-    print(f"[serve] arch={cfg.name} batch={args.batch} "
-          f"prompt={args.prompt_len} gen={args.gen_len}")
-    print(f"[serve] prefill {t_prefill*1e3:.1f} ms; decode "
-          f"{t_decode*1e3:.1f} ms total, "
-          f"{args.batch*(args.gen_len-1)/max(t_decode,1e-9):.1f} tok/s")
-    print(f"[serve] sample continuation tokens: {seqs[0][:16].tolist()}")
+    if args.trace is not None:
+        reqs = loadgen.read_trace(args.trace)
+    else:
+        reqs = loadgen.synthetic_trace(args.synthetic or 10, args.seed)
+    report = loadgen.replay(server, reqs, waves=args.waves)
+    out = json.dumps(report, indent=2, default=str)
+    if args.report:
+        with open(args.report, "w", encoding="utf-8") as f:
+            f.write(out + "\n")
+    print(f"escg_serve: {report['n_requests']} requests "
+          f"({report['waves']} waves) in {report['wall_s']:.2f}s — "
+          f"{report['requests_per_s']:.2f} req/s, "
+          f"{report['updates_per_s'] / 1e6:.3f} Mupd/s; cache "
+          f"{report['cache']['hits']}H/{report['cache']['misses']}M, "
+          f"dropped={report['dropped']}")
+    if not args.report:
+        print(out)
+    if args.check:
+        problems = loadgen.check_report(report)
+        for p in problems:
+            print(f"escg_serve: CHECK FAILED: {p}", file=sys.stderr)
+        return 1 if problems else 0
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

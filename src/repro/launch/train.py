@@ -1,9 +1,11 @@
-"""End-to-end LM training driver (deliverable b).
+"""[LM-scaffold appendix — NOT an ESCG entry point; DESIGN.md §9.]
 
-Runs any assigned arch (``--arch``), full or reduced (``--reduced``), with
-the synthetic pipeline, AdamW/Adafactor, checkpoint/restart fault tolerance
-and optional int8-EF gradient compression. On this CPU container use
-``--reduced`` (the full configs are exercised via the dry-run).
+End-to-end LM training driver retained from the quarantined LM-framework
+scaffold (synthetic pipeline, AdamW/Adafactor, checkpoint/restart fault
+tolerance, optional int8-EF gradient compression). The ESCG entry points
+are ``escg_run`` (repro.launch.escg_run) and ``escg_serve``
+(repro.launch.serve); nothing in the ESCG reproduction imports this
+module.
 
 Example (trains a ~100M-param granite-family model):
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
@@ -29,7 +31,10 @@ from ..runtime.fault import (FaultTolerantLoop, Heartbeat,
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="LM-scaffold appendix driver (DESIGN.md §9) — not an "
+                    "ESCG entry point; use escg_run / escg_serve for the "
+                    "reproduction")
     ap.add_argument("--arch", type=str, default="granite-3-8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--d_model", type=int, default=0)

@@ -1,4 +1,6 @@
-"""Train/serve step builders shared by the launcher, dry-run and tests."""
+"""[LM-scaffold appendix — DESIGN.md §9.] Train step builders shared by
+the quarantined LM launcher (``repro.launch.train``) and dry-run; no
+ESCG module imports this."""
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, Optional, Tuple

@@ -1,0 +1,30 @@
+"""ESCG serving layer (DESIGN.md §12) — the batch library as a resident
+scenario server.
+
+The ROADMAP's north star is serving heavy ESCG traffic: many users
+submitting heterogeneous ``(scenario, lattice, mcs, trials)`` requests
+against one long-lived process. This package turns ``core.trials`` /
+``core.simulation`` into that service:
+
+* :mod:`protocol` — the ``SimRequest`` / ``SimResponse`` dataclass
+  protocol with a JSON wire format;
+* :mod:`bucketing` — compiled-shape bucket keys and the admission queue
+  that packs same-bucket requests onto the pod axis of one mesh;
+* :mod:`cache` — the LRU compiled-engine cache (hit / miss / retrace
+  counters) proving repeat traffic never re-traces;
+* :mod:`executor` — the packed batch executor: one device batch, many
+  requests, per-request chunk-boundary accounting bit-identical to a
+  direct ``run_trials`` / ``simulate`` call;
+* :mod:`server` — :class:`~repro.serve.server.ScenarioServer`, the
+  in-process callable handle (admission → scheduling → responses);
+* :mod:`httpd` — a stdlib ``http.server`` adapter behind a flag;
+* :mod:`loadgen` — JSONL trace replay (synthetic generator included)
+  emitting throughput/latency reports compatible with ``bench_gate``'s
+  schema machinery.
+
+Transport is in-process first: tier-1 tests and the CI serve-smoke job
+drive the callable handle directly; the HTTP adapter wraps the same
+object without touching scheduling.
+"""
+from .protocol import SimRequest, SimResponse  # noqa: F401
+from .server import ScenarioServer  # noqa: F401

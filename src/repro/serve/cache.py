@@ -1,0 +1,128 @@
+"""LRU compiled-engine cache (DESIGN.md §12).
+
+Compilation is the serving tax: one `engines.build` + chunk trace costs
+orders of magnitude more than the chunk it produces executes in at smoke
+scale. The cache keys compiled state by ``(BucketKey, scenario_key)`` —
+the bucket fixes every trace-shaping knob, the scenario hash fixes the
+physics constants baked into the program — so any request stream that
+revisits a (shape, physics) pair pays the trace exactly once until LRU
+pressure evicts it.
+
+Retrace detection: each entry snapshots the jit caches of its compiled
+callables (``PjitFunction._cache_size``). A grown snapshot on an entry
+that already served a batch means XLA traced again under the same key —
+a served-layer invariant violation surfaced as the ``retraces`` counter
+(asserted zero by tests/test_serve.py)."""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.params import EscgParams
+from .bucketing import BucketKey
+
+__all__ = ["CompiledEngine", "EngineCache"]
+
+CacheKey = Tuple[BucketKey, str]
+
+
+def _jit_cache_size(fn: Any) -> int:
+    size = getattr(fn, "_cache_size", None)
+    return int(size()) if callable(size) else 0
+
+
+@dataclass
+class CompiledEngine:
+    """Everything reusable across batches of one (bucket, scenario):
+    params template, dominance matrix, execution kind, the jitted chunk /
+    init / counts callables and the device placements they expect."""
+    key: CacheKey
+    params: EscgParams             # template: seed/mcs/trials vary per job
+    dom: np.ndarray
+    kind: str                      # 'pod' | 'vmap' | 'single'
+    chunk_fn: Callable             # trial chunk (or simulate chunk: single)
+    init_fn: Callable              # trial_keys -> (grids, keys) | k0 -> grid
+    counts_fn: Callable            # grids -> (n, S+1) | grid -> (S+1,)
+    pipe: Optional[object] = None  # ObsPipeline when observables stream
+    built: Optional[object] = None  # BuiltEngine (pod / single kinds)
+    pod_width: int = 1             # trial-axis padding multiple
+    n_devices: int = 1             # devices a batch runs on (TrialResult)
+    ring_sharding: Optional[object] = None
+    jit_fns: Tuple[Any, ...] = ()  # callables watched for retraces
+    build_s: float = 0.0           # wall time of the build (miss cost)
+    runs: int = 0                  # batches served
+    _trace_mark: int = 0
+
+    def trace_count(self) -> int:
+        return sum(_jit_cache_size(f) for f in self.jit_fns)
+
+    def mark_traced(self) -> None:
+        self._trace_mark = self.trace_count()
+
+    def retraced(self) -> bool:
+        """True when a jit cache grew since the last ``mark_traced``."""
+        return self.trace_count() > self._trace_mark
+
+
+@dataclass
+class EngineCache:
+    """Ordered-dict LRU over :class:`CompiledEngine` with accounting."""
+    max_entries: int = 8
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    retraces: int = 0
+    _entries: "OrderedDict[CacheKey, CompiledEngine]" = field(
+        default_factory=OrderedDict)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return key in self._entries
+
+    def get_or_build(self, key: CacheKey,
+                     builder: Callable[[], CompiledEngine]
+                     ) -> Tuple[CompiledEngine, bool]:
+        """The cached entry for ``key``, building (and timing) on a miss.
+        Returns ``(entry, hit)``; a hit moves the entry to MRU position."""
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry, True
+        self.misses += 1
+        t0 = time.perf_counter()
+        entry = builder()
+        entry.build_s = time.perf_counter() - t0
+        entry.key = key
+        self._entries[key] = entry
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return entry, False
+
+    def note_run(self, entry: CompiledEngine) -> None:
+        """Post-batch bookkeeping: count a retrace if any watched jit
+        cache grew on an entry that had already served traffic (the
+        first batch's traces are the expected compile, not a retrace)."""
+        if entry.runs > 0 and entry.retraced():
+            self.retraces += 1
+        entry.runs += 1
+        entry.mark_traced()
+
+    def accounting(self) -> Dict[str, Any]:
+        return {
+            "entries": len(self._entries),
+            "max_entries": self.max_entries,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "retraces": self.retraces,
+            "hit_rate": (self.hits / (self.hits + self.misses)
+                         if (self.hits + self.misses) else 0.0),
+        }

@@ -1,0 +1,362 @@
+"""Packed batch executor (DESIGN.md §12): many requests, one device batch.
+
+``run_packed`` advances every request of one (bucket, scenario) group in
+a single trial batch on the pod axis. Bit-identity with a direct
+``trials.run_trials`` call — the serving contract — falls out of three
+repo invariants plus one scheduling rule:
+
+* per-trial keys are ``fold_in(PRNGKey(seed), local_index)``, a pure
+  function of the request's own seed — packing neighbours cannot perturb
+  a trajectory (core/trials.py module docstring);
+* trajectories and per-MCS alive masks are chunk-schedule invariant —
+  only *where the host looks* depends on chunk boundaries, and all
+  statistics here are per-MCS precise with explicit offsets;
+* observable rows are flush-schedule invariant, capacity permitting
+  (DESIGN.md §11) — the admission rail rejects capacities below a
+  request's effective chunk, so no packing schedule ever wraps the ring.
+
+The scheduling rule: each request ``j`` owns the boundary set its direct
+run would visit — multiples of ``eff_j = max(1, min(chunk_mcs, mcs_j))``
+capped at ``mcs_j`` — and the batch always advances to the NEAREST
+boundary over the active requests. A request's stasis early-exit and its
+``mcs_completed`` are evaluated only at its own boundaries, so both
+reproduce the direct run exactly; between its boundaries the request
+merely rides along (per-MCS stats are unaffected). The step size is
+therefore ``<= min(eff_j)`` over active requests, which bounds every
+ring flush below each request's capacity rail.
+
+``run_single`` is the same contract for the non-vmappable single-lattice
+engines (``sharded``): it replays ``simulation.simulate``'s loop line
+for line against the entry's cached compiled chunk.
+"""
+from __future__ import annotations
+
+from bisect import bisect_right
+from dataclasses import dataclass, field as dc_field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..core import engines, lattice, metrics
+from ..core import observables as obs_mod
+from ..core.params import EscgParams
+from ..core.simulation import SimResult, build_chunk_fn, build_obs_chunk_fn
+from ..core.trials import (POD_AXIS, TrialResult, _first_true_mcs,
+                           build_trial_chunk, build_trial_obs_chunk,
+                           fold_trial_keys, make_trial_init, pad_trials,
+                           pod_sharding)
+from .bucketing import Pending
+from .cache import CompiledEngine
+
+__all__ = ["engine_kind", "effective_chunk", "build_entry", "run_packed",
+           "run_single"]
+
+EmitFn = Callable[[Pending, Dict], None]
+
+
+def engine_kind(engine: str) -> str:
+    """Execution path of an engine: ``'pod'`` (composed pod x grid mesh),
+    ``'vmap'`` (trial-vmapped) or ``'single'`` (one lattice at a time —
+    the non-vmappable multi-device engines)."""
+    caps = engines.get_engine(engine).caps
+    if caps.pod_composable:
+        return "pod"
+    if caps.vmappable:
+        return "vmap"
+    return "single"
+
+
+def effective_chunk(p: EscgParams, n_mcs: int) -> int:
+    """The chunk length a direct driver run would use (run_trials /
+    simulate both clamp the configured chunk to the MCS budget)."""
+    return max(1, min(p.chunk_mcs, n_mcs))
+
+
+def build_entry(p: EscgParams, dom: np.ndarray) -> CompiledEngine:
+    """Compile the reusable state for one (bucket, scenario): the engine,
+    the jitted chunk, the init closure and the device placements —
+    everything a batch needs except the per-request seeds/budgets."""
+    dom_j = jnp.asarray(dom, jnp.float32)
+    kind = engine_kind(p.engine)
+    obs_on = bool(p.observables)
+    pipe = None
+
+    if kind == "pod":
+        built = engines.build(p, dom_j)
+        if obs_on:
+            chunk_fn, pipe = build_trial_obs_chunk(p, dom_j, built=built)
+        else:
+            chunk_fn = build_trial_chunk(p, dom_j, built=built)
+        init_fn = make_trial_init(p, built.key_sharding,
+                                  built.batch_sharding)
+        counts_fn = jax.jit(jax.vmap(
+            lambda g: metrics.counts(g, p.species)))
+        return CompiledEngine(
+            key=None, params=p, dom=np.asarray(dom), kind=kind,
+            chunk_fn=chunk_fn, init_fn=init_fn, counts_fn=counts_fn,
+            pipe=pipe, built=built, pod_width=built.pod_width,
+            n_devices=built.batch_sharding.mesh.devices.size,
+            ring_sharding=NamedSharding(built.key_sharding.mesh,
+                                        P(None, POD_AXIS)),
+            jit_fns=(chunk_fn, counts_fn))
+
+    if kind == "vmap":
+        caps = engines.get_engine(p.engine).caps
+        sharding = pod_sharding(None if caps.trial_shardable else 1)
+        n_dev = sharding.mesh.devices.size
+        if obs_on:
+            chunk_fn, pipe = build_trial_obs_chunk(p, dom_j)
+        else:
+            chunk_fn = build_trial_chunk(p, dom_j)
+        init_fn = make_trial_init(p, sharding)
+        counts_fn = jax.jit(jax.vmap(
+            lambda g: metrics.counts(g, p.species)))
+        return CompiledEngine(
+            key=None, params=p, dom=np.asarray(dom), kind=kind,
+            chunk_fn=chunk_fn, init_fn=init_fn, counts_fn=counts_fn,
+            pipe=pipe, built=None, pod_width=n_dev, n_devices=n_dev,
+            ring_sharding=NamedSharding(sharding.mesh, P(None, POD_AXIS)),
+            jit_fns=(chunk_fn, counts_fn))
+
+    built = engines.build(p, dom_j)
+    if obs_on:
+        chunk_fn, pipe = build_obs_chunk_fn(p, dom_j, built=built)
+    else:
+        chunk_fn = build_chunk_fn(p, dom_j, built=built)
+    return CompiledEngine(
+        key=None, params=p, dom=np.asarray(dom), kind="single",
+        chunk_fn=chunk_fn, init_fn=None, counts_fn=None, pipe=pipe,
+        built=built, pod_width=1,
+        n_devices=(built.grid_sharding.mesh.devices.size
+                   if built.grid_sharding is not None else 1),
+        ring_sharding=None, jit_fns=(chunk_fn,))
+
+
+# ----------------------------- packed batches ------------------------------ #
+
+@dataclass
+class _JobState:
+    """Host-side streamed statistics of one request inside the batch —
+    the per-request mirror of the accumulator block in run_trials."""
+    pend: Pending
+    sl: slice                    # this request's rows in the batch
+    n: int
+    n_mcs: int
+    eff: int
+    boundaries: List[int]        # ascending: direct-run chunk boundaries
+    ext: np.ndarray
+    stasis: np.ndarray
+    surv: np.ndarray
+    final_cnts: np.ndarray
+    rows: List[np.ndarray] = dc_field(default_factory=list)
+    kept: int = 0
+    att: int = 0
+    frozen_at: int = -1          # mcs_completed once finished
+
+    def next_boundary(self, done: int) -> int:
+        return self.boundaries[bisect_right(self.boundaries, done)]
+
+
+def _job_boundaries(eff: int, n_mcs: int) -> List[int]:
+    bs = list(range(eff, n_mcs, eff))
+    bs.append(n_mcs)
+    return bs
+
+
+def run_packed(entry: CompiledEngine, pends: Sequence[Pending],
+               emit: Optional[EmitFn] = None
+               ) -> List[Tuple[Pending, TrialResult]]:
+    """Run one packed batch; one ``TrialResult`` per request, each
+    bit-identical to ``run_trials(req.scenario, req.n_trials, ...)``."""
+    p = entry.params
+    pipe = entry.pipe
+    obs_on = pipe is not None
+    s = p.species
+
+    states: List[_JobState] = []
+    off = 0
+    for pend in pends:
+        n = max(1, pend.req.n_trials)
+        n_mcs = pend.n_mcs
+        eff = effective_chunk(p, n_mcs)
+        states.append(_JobState(
+            pend=pend, sl=slice(off, off + n), n=n, n_mcs=n_mcs, eff=eff,
+            boundaries=_job_boundaries(eff, n_mcs) if n_mcs else [],
+            ext=np.zeros(0), stasis=np.zeros(0), surv=np.zeros(0),
+            final_cnts=np.zeros(0)))
+        off += n
+    total = off
+    n_pad = pad_trials(total, entry.pod_width)
+
+    blocks = [fold_trial_keys(jax.random.PRNGKey(js.pend.params.seed),
+                              js.n) for js in states]
+    if n_pad > total:
+        # padding trials are physics-identical ballast for the SPMD
+        # partitioner — same accounting as run_trials' own padding
+        blocks.append(fold_trial_keys(jax.random.PRNGKey(0),
+                                      n_pad - total))
+    grids, keys = entry.init_fn(jnp.concatenate(blocks, axis=0))
+
+    init_cnts = np.asarray(entry.counts_fn(grids))
+    for js in states:
+        ic = init_cnts[js.sl]
+        js.ext = np.where(ic[:, 1:] > 0, -1, 0).astype(np.int64)
+        js.stasis = np.full(js.n, -1, np.int64)
+        js.surv = ic[:, 1:] > 0
+        js.final_cnts = ic
+        if js.n_mcs == 0:
+            js.frozen_at = 0
+
+    ring = pos = None
+    if obs_on:
+        effs = [js.eff for js in states if js.frozen_at < 0]
+        cap = obs_mod.ring_capacity(p, max(effs, default=1))
+        ring, pos = obs_mod.ring_init(cap, (n_pad, pipe.width))
+        ring = jax.device_put(ring, entry.ring_sharding)
+
+    chunk_fn = entry.chunk_fn
+    done = 0
+    active = [js for js in states if js.frozen_at < 0]
+    while active:
+        nxt = min(js.next_boundary(done) for js in active)
+        m = nxt - done
+        if obs_on:
+            grids, keys, ring, pos, cnts, alive, kept, att = chunk_fn(
+                grids, keys, ring, pos, m)
+        else:
+            grids, keys, cnts, alive, kept, att = chunk_fn(grids, keys, m)
+        alive_h = np.asarray(alive)              # (n_pad, m, S) bool
+        cnts_h = np.asarray(cnts)
+        kept_h, att_h = np.asarray(kept), np.asarray(att)
+        rows_h = (obs_mod.ring_flush(np.asarray(ring), done, done + m)
+                  if obs_on else None)
+
+        for js in active:
+            a = alive_h[js.sl]
+            js.final_cnts = cnts_h[js.sl]
+            js.kept += int(kept_h[js.sl].sum())
+            js.att += int(att_h[js.sl].sum())
+            first_dead = _first_true_mcs(~a, done)
+            js.ext = np.where((js.ext < 0) & (first_dead > 0),
+                              first_dead, js.ext)
+            first_st = _first_true_mcs(a.sum(axis=2) <= 1, done)
+            js.stasis = np.where((js.stasis < 0) & (first_st > 0),
+                                 first_st, js.stasis)
+            js.surv = a[:, -1, :]
+            if obs_on:
+                js.rows.append(rows_h[:, js.sl, :])
+            at_boundary = nxt in js.boundaries or nxt == js.n_mcs
+            if at_boundary and (nxt == js.n_mcs
+                                or (js.stasis >= 0).all()):
+                js.frozen_at = nxt
+            if emit is not None:
+                ev = {"mcs": nxt,
+                      "in_stasis": int((js.stasis >= 0).sum()),
+                      "n_trials": js.n, "done": js.frozen_at >= 0}
+                if obs_on:
+                    ev["observables"] = pipe.split(
+                        np.moveaxis(rows_h[:, js.sl, :], 0, 1))
+                emit(js.pend, ev)
+        done = nxt
+        active = [js for js in active if js.frozen_at < 0]
+
+    out = []
+    for js in states:
+        observables = {}
+        if obs_on and js.rows:
+            rows = np.concatenate(js.rows, axis=0)   # (T, n, W)
+            observables = pipe.split(np.moveaxis(rows, 0, 1))
+        out.append((js.pend, TrialResult(
+            survival=js.surv.astype(bool),
+            densities=js.final_cnts / p.n_cells,
+            stasis_mcs=js.stasis,
+            extinction_mcs=js.ext,
+            mcs_completed=js.frozen_at,
+            kept_fraction=(js.kept / js.att) if js.att else 1.0,
+            n_trials=js.n,
+            n_devices=entry.n_devices,
+            observables=observables)))
+    return out
+
+
+# --------------------------- single-lattice path --------------------------- #
+
+def run_single(entry: CompiledEngine, pend: Pending,
+               emit: Optional[EmitFn] = None) -> SimResult:
+    """The ``simulate`` loop against the cached compiled chunk, for
+    engines that decompose one lattice across devices and cannot vmap
+    over trials. Mirrors ``simulation.simulate`` exactly (same key
+    split order, same eager init, same per-chunk stasis rule)."""
+    p = pend.params
+    pipe = entry.pipe
+    obs_on = pipe is not None
+    cell_dt = jnp.dtype(p.cell_dtype)
+
+    key = jax.random.PRNGKey(p.seed)
+    key, k0 = jax.random.split(key)
+    grid0 = lattice.init_grid(k0, p.height, p.length, p.species, p.empty,
+                              dtype=cell_dt)
+    grid = jnp.asarray(grid0, cell_dt)
+    if entry.built is not None and entry.built.grid_sharding is not None:
+        grid = jax.device_put(grid, entry.built.grid_sharding)
+
+    n_mcs_total = pend.n_mcs
+    ring = pos = None
+    rows_all: List[np.ndarray] = []
+    if obs_on:
+        max_chunk = effective_chunk(p, max(1, n_mcs_total))
+        cap = obs_mod.ring_capacity(p, max_chunk)
+        if cap < max_chunk:
+            raise ValueError(
+                f"obs_capacity {cap} < chunk rows {max_chunk}: the "
+                "single-lattice path flushes once per chunk (0 = auto)")
+        ring, pos = obs_mod.ring_init(cap, (pipe.width,))
+
+    chunk_fn = entry.chunk_fn
+    hist = [np.asarray(metrics.counts(grid, p.species))]
+    mcs_done, stasis_mcs = 0, -1
+    kept_total = att_total = 0
+
+    while mcs_done < n_mcs_total:
+        m = min(p.chunk_mcs, n_mcs_total - mcs_done)
+        if obs_on:
+            grid, key, ring, pos, kept, att = chunk_fn(grid, key, ring,
+                                                       pos, m)
+            rows_h = obs_mod.ring_flush(np.asarray(ring), mcs_done,
+                                        mcs_done + m)
+            rows_all.append(rows_h)
+            cnts_h = pipe.counts_from_rows(rows_h, p.species)
+        else:
+            grid, key, cnts, kept, att = chunk_fn(grid, key, m)
+            cnts_h = np.asarray(cnts)
+        hist.append(cnts_h)
+        kept_total += int(kept)
+        att_total += int(att)
+        mcs_done += m
+        alive = (cnts_h[:, 1:] > 0).sum(axis=1)
+        if stasis_mcs < 0 and np.any(alive <= 1):
+            stasis_mcs = mcs_done - m + int(np.argmax(alive <= 1)) + 1
+        if emit is not None:
+            emit(pend, {"mcs": mcs_done,
+                        "in_stasis": int(stasis_mcs >= 0),
+                        "n_trials": 1,
+                        "done": (stasis_mcs >= 0
+                                 or mcs_done >= n_mcs_total)})
+        if stasis_mcs >= 0:
+            break
+
+    densities = (np.concatenate([hist[0][None, :]] + hist[1:], axis=0)
+                 / p.n_cells)
+    observables = {"densities": densities}
+    if obs_on and rows_all:
+        streams = pipe.split(np.concatenate(rows_all, axis=0))
+        streams["densities"] = densities
+        observables = streams
+    return SimResult(
+        grid=np.asarray(grid), observables=observables,
+        mcs_completed=mcs_done, stasis_mcs=stasis_mcs,
+        kept_fraction=(kept_total / att_total) if att_total else 1.0)

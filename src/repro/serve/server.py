@@ -1,0 +1,275 @@
+"""ScenarioServer — the in-process serving handle (DESIGN.md §12).
+
+One long-lived object owns the admission queue, the compiled-engine
+cache and the scheduler loop:
+
+``submit`` parses + resolves + validates a request (invalid requests get
+an immediate error response — they are *answered*, never dropped),
+stamps the admission time and enqueues it under its (bucket,
+scenario_key) group. ``step`` drains one batch: pop a group by the
+age/occupancy policy, hit or build the compiled engine, run the packed
+executor (or the single-lattice path) and materialize one
+``SimResponse`` per request with per-request queue / compile / run
+latency. ``drain`` steps until the queue is empty. The whole object is
+guarded by one reentrant lock, so the threaded HTTP adapter can share
+it; execution itself is deliberately serial — there is one accelerator.
+
+Per-chunk progress events (``progress(id)``) stream the boundary-level
+state of a running request: MCS reached, trials in stasis, and — when
+observables are on — that chunk's finalized observable rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from ..core import dominance as dom_mod
+from ..core import observables as obs_mod
+from ..core.scenarios import resolve_config, scenario_key
+from .bucketing import AdmissionQueue, Pending, bucket_key
+from .cache import EngineCache
+from .executor import (build_entry, effective_chunk, engine_kind,
+                       run_packed, run_single)
+from .protocol import SimRequest, SimResponse, parse_request
+
+__all__ = ["ScenarioServer"]
+
+
+def _latency_stats(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"count": 0}
+    a = np.asarray(xs, dtype=np.float64)
+    return {"count": int(a.size), "mean_s": float(a.mean()),
+            "p50_s": float(np.percentile(a, 50)),
+            "p95_s": float(np.percentile(a, 95)),
+            "max_s": float(a.max())}
+
+
+class ScenarioServer:
+    """Continuously-batched ESCG scenario server (in-process transport).
+
+    ``max_batch_trials`` caps the trials packed into one device batch;
+    ``cache_entries`` bounds the LRU compiled-engine cache. Typical use::
+
+        srv = ScenarioServer()
+        rid = srv.submit({"scenario": "park3", "n_trials": 4,
+                          "run": {"mcs": 200, "length": 64, "height": 64}})
+        srv.drain()
+        resp = srv.response(rid)     # resp.result is a TrialResult
+    """
+
+    def __init__(self, max_batch_trials: int = 64,
+                 cache_entries: int = 8) -> None:
+        self.max_batch_trials = int(max_batch_trials)
+        self._queue = AdmissionQueue()
+        self._cache = EngineCache(max_entries=int(cache_entries))
+        self._lock = threading.RLock()
+        self._responses: Dict[str, SimResponse] = {}
+        self._events: Dict[str, List[dict]] = {}
+        self._order: List[str] = []      # response ids in submit order
+        self._seq = 0
+        self._n_requests = 0
+        self._n_errors = 0
+        self._n_batches = 0
+        self._n_packed_trials = 0
+        self._lat_total: List[float] = []
+        self._lat_queue: List[float] = []
+        self._lat_run: List[float] = []
+
+    # ------------------------------ admission -------------------------- #
+
+    def submit(self, request: Union[str, dict, SimRequest]) -> str:
+        """Admit one request; returns its response id. Requests that fail
+        parsing/resolution/validation are answered immediately with an
+        error response under the same id (never silently dropped)."""
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
+            self._n_requests += 1
+            rid = ""
+            try:
+                req = parse_request(request)
+                rid = req.id or f"req-{seq}"
+                if rid in self._responses or any(rid == i for i in
+                                                 self._order):
+                    # answer under a fresh id: clobbering the original
+                    # response would silently drop one of the two
+                    rid = f"{rid}#dup{seq}"
+                    raise ValueError(f"duplicate request id {req.id!r}")
+                req = dataclasses.replace(req, id=rid)
+                pend = self._admit(seq, req)
+            except Exception as e:  # answered, not dropped
+                rid = rid or f"req-{seq}"
+                self._order.append(rid)
+                self._respond(SimResponse(id=rid, ok=False, kind="error",
+                                          error=str(e)))
+                return rid
+            self._order.append(rid)
+            self._queue.push(pend)
+            return rid
+
+    def _admit(self, seq: int, req: SimRequest) -> Pending:
+        if req.n_trials < 1:
+            raise ValueError("n_trials must be >= 1")
+        params, dom = resolve_config(req.scenario, None, req.engine,
+                                     req.run)
+        p = params.validate()
+        if dom is None:
+            dom = dom_mod.circulant(p.species)
+        kind = engine_kind(p.engine)
+        if kind == "single" and req.n_trials != 1:
+            raise ValueError(
+                f"engine {p.engine!r} is not vmappable: the server runs "
+                "it on the single-lattice path, one trial per request "
+                "(submit n_trials separate requests, or pick a "
+                "trial-shardable engine)")
+        sched = None
+        if p.observables:
+            eff = effective_chunk(p, max(1, p.mcs))
+            if p.obs_capacity and p.obs_capacity < eff:
+                raise ValueError(
+                    f"obs_capacity {p.obs_capacity} < effective chunk "
+                    f"{eff}: the server's bit-identity contract forbids "
+                    "lossy ring wraparound (0 = auto-size)")
+            if p.k_mcs > 1 and any(
+                    not s.from_counts
+                    for s in obs_mod.build_pipeline(p).specs):
+                # lag-held rows depend on launch-group boundaries: only
+                # identical MCS schedules may share a batch (bucketing.py)
+                sched = p.mcs
+        return Pending(seq=seq, req=req, params=p, dom=np.asarray(dom),
+                       bucket=bucket_key(p), scenario_key=scenario_key(
+                           req.scenario),
+                       kind=kind, n_mcs=p.mcs, sched=sched)
+
+    # ------------------------------ scheduling ------------------------- #
+
+    def step(self) -> int:
+        """Drain ONE batch from the queue; returns the number of requests
+        answered (0 when idle)."""
+        with self._lock:
+            popped = self._queue.pop_batch(self.max_batch_trials)
+            if popped is None:
+                return 0
+            (bucket, skey, _sched), pends = popped
+            t_start = time.perf_counter()
+            first = pends[0]
+            entry, hit = self._cache.get_or_build(
+                (bucket, skey),
+                lambda: build_entry(first.params, first.dom))
+            compile_s = 0.0 if hit else entry.build_s
+            t_run = time.perf_counter()
+            try:
+                if entry.kind == "single":
+                    results = [(pd, run_single(entry, pd, emit=self._emit))
+                               for pd in pends]
+                    kind = "single"
+                else:
+                    results = run_packed(entry, pends, emit=self._emit)
+                    kind = "trials"
+            except Exception as e:
+                run_s = time.perf_counter() - t_run
+                self._cache.note_run(entry)
+                for pd in pends:
+                    self._respond(SimResponse(
+                        id=pd.req.id, ok=False, kind="error",
+                        error=str(e),
+                        timing={"queue_s": t_start - pd.t_submit,
+                                "compile_s": compile_s, "run_s": run_s},
+                        cache_hit=hit, bucket=bucket.short(),
+                        scenario_key=skey))
+                return len(pends)
+            run_s = time.perf_counter() - t_run
+            self._cache.note_run(entry)
+            self._n_batches += 1
+            self._n_packed_trials += sum(max(1, pd.req.n_trials)
+                                         for pd in pends)
+            for pd, res in results:
+                queue_s = t_start - pd.t_submit
+                self._lat_queue.append(queue_s)
+                self._lat_run.append(run_s)
+                self._lat_total.append(time.perf_counter() - pd.t_submit)
+                self._respond(SimResponse(
+                    id=pd.req.id, ok=True, kind=kind, result=res,
+                    timing={"queue_s": queue_s, "compile_s": compile_s,
+                            "run_s": run_s},
+                    cache_hit=hit, bucket=bucket.short(),
+                    scenario_key=skey))
+            return len(pends)
+
+    def drain(self) -> int:
+        """Step until the queue is empty; total requests answered."""
+        n = 0
+        while True:
+            k = self.step()
+            if not k:
+                return n
+            n += k
+
+    def serve(self, requests: Sequence[Union[str, dict, SimRequest]]
+              ) -> List[SimResponse]:
+        """Submit-all + drain convenience: responses in submit order."""
+        ids = [self.submit(r) for r in requests]
+        self.drain()
+        return [self._responses[i] for i in ids]
+
+    def __call__(self, request: Union[str, dict, SimRequest]
+                 ) -> SimResponse:
+        """One-shot handle: submit a single request and run it now."""
+        return self.serve([request])[0]
+
+    # ------------------------------ responses -------------------------- #
+
+    def _respond(self, resp: SimResponse) -> None:
+        if not resp.ok:
+            self._n_errors += 1
+        self._responses[resp.id] = resp
+
+    def _emit(self, pend: Pending, event: dict) -> None:
+        self._events.setdefault(pend.req.id, []).append(event)
+
+    def response(self, rid: str) -> Optional[SimResponse]:
+        with self._lock:
+            return self._responses.get(rid)
+
+    def responses(self) -> List[SimResponse]:
+        """All responses so far, in submit order."""
+        with self._lock:
+            return [self._responses[i] for i in self._order
+                    if i in self._responses]
+
+    def progress(self, rid: str) -> List[dict]:
+        """Per-chunk streamed events for one request (empty until its
+        batch starts running)."""
+        with self._lock:
+            return list(self._events.get(rid, ()))
+
+    # ------------------------------ accounting ------------------------- #
+
+    def accounting(self) -> Dict[str, Any]:
+        """Serving counters: every admitted request is either pending,
+        answered ok, or answered with an error — ``dropped`` (admitted
+        but never answered while the queue is empty) must be zero."""
+        with self._lock:
+            pending = len(self._queue)
+            responded = len(self._responses)
+            return {
+                "requests": self._n_requests,
+                "responded": responded,
+                "errors": self._n_errors,
+                "pending": pending,
+                "dropped": self._n_requests - responded - pending,
+                "batches": self._n_batches,
+                "packed_trials": self._n_packed_trials,
+                "queue_depth": self._queue.depth(),
+                "cache": self._cache.accounting(),
+                "latency": {
+                    "total": _latency_stats(self._lat_total),
+                    "queue": _latency_stats(self._lat_queue),
+                    "run": _latency_stats(self._lat_run),
+                },
+            }

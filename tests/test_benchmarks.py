@@ -97,9 +97,22 @@ def test_time_stats_true_median(monkeypatch):
 
 # ------------------- gate schema + trajectory compare ---------------------- #
 
+def _serve_gate_row():
+    """A minimal schema-valid family-``serve`` row (v5)."""
+    return {
+        "name": "serve_throughput_smoke", "family": "serve",
+        "scenario": "mixed", "local_kernel": "mixed", "engine": "server",
+        "backend": "cpu", "observables": False, "us_per_call": 5e5,
+        "derived": "2.00 req/s, 0.010 Mupd/s", "n_requests": 20,
+        "requests_per_s": 2.0, "updates_per_s": 1e4,
+        "cache_hits": 5, "cache_misses": 5, "dropped": 0,
+    }
+
+
 def _gate_doc():
-    """A minimal schema-valid v4 document covering every required local
-    kernel and scenario, plus one observable-overhead pair."""
+    """A minimal schema-valid v5 document covering every required local
+    kernel and scenario, one observable-overhead pair and the serving
+    throughput row."""
     from benchmarks import bench_gate as bg
 
     def row(kernel, scenario, observables=False):
@@ -118,6 +131,7 @@ def _gate_doc():
     rows = [row(k, bg.SCENARIOS[0]) for k in bg.LOCAL_KERNELS]
     rows += [row("jnp", sc) for sc in bg.SCENARIOS[1:]]
     rows += [row("jnp", bg.SCENARIOS[0], observables=True)]
+    rows += [_serve_gate_row()]
     return {"schema": bg.SCHEMA, "backend": "cpu", "devices": 1,
             "smoke": True, "unix_time": 1700000000, "rows": rows}
 
@@ -141,6 +155,7 @@ def test_gate_document_schema_v4():
     # the caller accepts historical schemas, but not as a fresh document
     v3 = copy.deepcopy(doc)
     v3["schema"] = bg.SCHEMA_V3
+    v3["rows"] = [r for r in v3["rows"] if r["family"] != "serve"]
     for r in v3["rows"]:
         r.pop("observables", None)
     assert bg.validate_gate_document(v3, accept=bg.KNOWN_SCHEMAS) == []
@@ -165,6 +180,34 @@ def test_gate_document_schema_v4():
     bad = copy.deepcopy(doc)
     bad["rows"] = [r for r in bad["rows"] if r["local_kernel"] != "fused"]
     assert any("fused" in e for e in bg.validate_gate_document(bad))
+
+
+def test_gate_document_schema_v5_serve_row():
+    """v5: current-schema documents must carry the serving throughput
+    row, serve rows validate their own counters, and older schemas
+    reject the family outright."""
+    from benchmarks import bench_gate as bg
+    doc = _gate_doc()
+    assert bg.validate_gate_document(doc) == []
+    # dropping the serve row fails a current-schema document
+    bad = copy.deepcopy(doc)
+    bad["rows"] = [r for r in bad["rows"] if r["family"] != "serve"]
+    assert any("serve" in e for e in bg.validate_gate_document(bad))
+    # serve counters are load-bearing: dropped requests fail the row
+    bad = copy.deepcopy(doc)
+    next(r for r in bad["rows"] if r["family"] == "serve")["dropped"] = 1
+    assert any("dropped" in e for e in bg.validate_gate_document(bad))
+    bad = copy.deepcopy(doc)
+    next(r for r in bad["rows"]
+         if r["family"] == "serve")["n_requests"] = 0
+    assert any("n_requests" in e for e in bg.validate_gate_document(bad))
+    # a serve row inside an older-schema document is a schema violation
+    assert any("require schema" in e for e in bg.validate_gate_row(
+        _serve_gate_row(), schema=bg.SCHEMA_V3))
+    assert any("require schema" in e for e in bg.validate_gate_row(
+        _serve_gate_row(), schema=bg.SCHEMA_V4))
+    # the standalone row validates (the loadgen gate_row shape)
+    assert bg.validate_gate_row(_serve_gate_row()) == []
 
 
 def test_compare_documents_gates_regressions():

@@ -260,3 +260,61 @@ def test_engines_alias_tracks_late_registration():
     finally:
         engines._REGISTRY.pop(name, None)
     assert name not in params_mod.ENGINES
+
+
+# --------------------- scenario content hash (§12) ------------------------- #
+
+class TestScenarioKey:
+    """``scenarios.scenario_key`` — the serving cache's physics hash
+    (DESIGN.md §12): deterministic per content, insensitive to field
+    construction order, sensitive to every physics field."""
+
+    def test_every_preset_hashes_stably_twice(self):
+        for name in scenario_names():
+            a = sc_mod.scenario_key(make_scenario(name))
+            b = sc_mod.scenario_key(make_scenario(name))
+            assert a == b, name
+            assert len(a) == 16 and int(a, 16) >= 0, a
+
+    def test_every_parametric_preset_hashes_stably_twice(self):
+        for name in PRESETS:
+            assert sc_mod.scenario_key(make_scenario(name)) == \
+                sc_mod.scenario_key(make_scenario(name)), name
+
+    def test_distinct_scenarios_distinct_keys(self):
+        keys = {sc_mod.scenario_key(make_scenario(n)) for n in PRESETS}
+        assert len(keys) == len(PRESETS)
+
+    def test_extras_iteration_order_does_not_move_the_key(self):
+        """The historical hazard: dict/tuple extras in different insertion
+        orders must hash identically — ``__post_init__`` canonicalizes."""
+        a = Scenario(name="adhoc", species=3,
+                     extras={"mobility": 3e-4, "epsilon": 0.4})
+        b = Scenario(name="adhoc", species=3,
+                     extras={"epsilon": 0.4, "mobility": 3e-4})
+        assert a == b
+        assert sc_mod.scenario_key(a) == sc_mod.scenario_key(b)
+        c = Scenario(name="adhoc", species=3,
+                     extras=(("epsilon", 0.4), ("mobility", 3e-4)))
+        assert sc_mod.scenario_key(c) == sc_mod.scenario_key(a)
+
+    def test_key_moves_with_physics(self):
+        base = make_scenario("park3")
+        k0 = sc_mod.scenario_key(base)
+        assert sc_mod.scenario_key(base.replace(empty=0.5)) != k0
+        assert sc_mod.scenario_key(
+            base.replace(extras={"mobility": 1e-3})) != k0
+
+    def test_key_is_cross_process_stable(self, subproc):
+        """Not ``hash()``-based: the same scenario must hash identically
+        in a fresh interpreter (PYTHONHASHSEED varies)."""
+        here = {n: sc_mod.scenario_key(make_scenario(n)) for n in PRESETS}
+        out = subproc("""
+            import json
+            from repro.core import scenarios as sc
+            names = %r
+            print(json.dumps({n: sc.scenario_key(sc.make_scenario(n))
+                              for n in names}))
+        """ % (list(PRESETS),), 1)
+        there = json.loads(out.strip().splitlines()[-1])
+        assert there == here

@@ -1,0 +1,578 @@
+"""Serving layer (DESIGN.md §12): wire protocol, bucketing, compiled-engine
+cache, packed execution, streaming, loadgen and the CLI.
+
+The load-bearing guarantee is the serving contract: every response is
+bit-identical to the direct ``run_trials`` / ``simulate`` call it
+replaces — whatever other traffic shared the batch — and repeat traffic
+for a (bucket, scenario) pair compiles exactly once (cache hit, zero
+retraces). Both are asserted here on the real engines; the composed CI
+job re-runs this suite on 8 fake devices.
+"""
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.scenarios import (EngineConfig, RunConfig, make_scenario,
+                                  resolve_config, scenario_key)
+from repro.core.simulation import simulate
+from repro.core.trials import run_trials
+from repro.serve import ScenarioServer, SimRequest
+from repro.serve.bucketing import AdmissionQueue, BucketKey, Pending, \
+    bucket_key
+from repro.serve.cache import CompiledEngine, EngineCache
+from repro.serve.protocol import SimResponse, parse_request
+from repro.serve import loadgen
+
+pytestmark = pytest.mark.composed
+
+# small + deterministic: one compiled shape reused across most tests so
+# the module-level compile tax is paid once per interpreter
+ENGINE = {"engine": "batched", "tile": [8, 8]}
+RUN16 = {"height": 16, "length": 16, "mcs": 10, "chunk_mcs": 5}
+
+
+def req16(seed=0, mcs=10, n_trials=2, scenario="park3", rid="",
+          observables=None):
+    run = dict(RUN16, seed=seed, mcs=mcs)
+    if observables is not None:
+        run["observables"] = observables
+    return SimRequest(scenario, engine=ENGINE, run=run,
+                      n_trials=n_trials, id=rid)
+
+
+def direct_trials(req):
+    """The ground truth the server must reproduce bit-for-bit."""
+    return run_trials(req.scenario, n_trials=req.n_trials,
+                      engine=req.engine, run=req.run)
+
+
+def assert_trial_results_equal(a, b):
+    np.testing.assert_array_equal(a.survival, b.survival)
+    np.testing.assert_array_equal(a.densities, b.densities)
+    np.testing.assert_array_equal(a.stasis_mcs, b.stasis_mcs)
+    np.testing.assert_array_equal(a.extinction_mcs, b.extinction_mcs)
+    assert a.mcs_completed == b.mcs_completed
+    assert a.kept_fraction == b.kept_fraction
+    assert a.n_trials == b.n_trials
+    assert set(a.observables) == set(b.observables)
+    for k in a.observables:
+        np.testing.assert_array_equal(a.observables[k], b.observables[k])
+
+
+# ------------------------------ protocol ----------------------------------- #
+
+class TestProtocol:
+    def test_request_constructor_normalizes_wire_shapes(self):
+        r = req16(seed=3)
+        assert r.scenario.name == "park3"
+        assert r.engine.engine == "batched" and r.engine.tile == (8, 8)
+        assert r.run.seed == 3 and r.run.chunk_mcs == 5
+
+    def test_request_json_roundtrip(self):
+        r = req16(seed=7, n_trials=3, rid="a1")
+        r2 = SimRequest.from_json(r.to_json())
+        assert r2 == r
+
+    def test_unknown_fields_rejected(self):
+        with pytest.raises(ValueError, match="unknown Scenario"):
+            parse_request({"scenario": {"name": "x", "speces": 3}})
+        with pytest.raises(ValueError, match="unknown EngineConfig"):
+            parse_request({"scenario": "park3", "engine": {"engin": "b"}})
+        with pytest.raises(ValueError, match="unknown RunConfig"):
+            parse_request({"scenario": "park3", "run": {"mc": 5}})
+        with pytest.raises(ValueError, match="missing 'scenario'"):
+            parse_request({"n_trials": 2})
+
+    def test_response_json_roundtrip_trials(self, server):
+        resp = server(req16(seed=11, rid="rt1"))
+        assert resp.ok and resp.kind == "trials"
+        back = SimResponse.from_json(resp.to_json())
+        assert back.id == "rt1" and back.ok and back.kind == "trials"
+        assert back.cache_hit == resp.cache_hit
+        assert back.bucket == resp.bucket
+        assert back.scenario_key == resp.scenario_key
+        assert_trial_results_equal(back.result, resp.result)
+
+    def test_error_response_roundtrip(self, server):
+        resp = server({"scenario": "no_such_preset", "id": "bad1"})
+        assert not resp.ok and resp.kind == "error" and resp.error
+        back = SimResponse.from_json(resp.to_json())
+        assert back.kind == "error" and back.result is None
+        assert back.error == resp.error
+
+
+# ------------------------------ bucketing ---------------------------------- #
+
+def _resolved(seed=0, mcs=10, scenario="park3", **over):
+    r = req16(seed=seed, mcs=mcs, scenario=scenario)
+    engine = r.engine.replace(**over) if over else r.engine
+    p, _ = resolve_config(r.scenario, None, engine, r.run)
+    return p.validate()
+
+
+class TestBucketing:
+    def test_seed_mcs_trials_do_not_move_the_bucket(self):
+        assert bucket_key(_resolved(seed=1, mcs=10)) == \
+            bucket_key(_resolved(seed=9, mcs=20))
+
+    def test_shape_knobs_move_the_bucket(self):
+        b = bucket_key(_resolved())
+        assert bucket_key(_resolved(tile=(4, 4))) != b
+        assert bucket_key(_resolved(engine="sublattice")) != b
+
+    def test_short_is_human_readable(self):
+        s = bucket_key(_resolved()).short()
+        assert "batched" in s and "16x16" in s
+
+    def _pend(self, seq, bucket, n_trials=1, skey="k"):
+        return Pending(seq=seq, req=req16(n_trials=n_trials),
+                       params=None, dom=np.zeros((4, 4)), bucket=bucket,
+                       scenario_key=skey, kind="vmap", n_mcs=10)
+
+    def test_pop_batch_age_policy(self):
+        a = BucketKey("batched", "jnp", 1, (8, 8), 16, 16, 3, "int32",
+                      None, None, 5, (), 0)
+        b = a._replace(height=32)
+        q = AdmissionQueue()
+        q.push(self._pend(1, a))
+        q.push(self._pend(2, b))
+        q.push(self._pend(3, a))
+        gkey, take = q.pop_batch(64)       # a holds the oldest request
+        assert gkey[0] == a and [p.seq for p in take] == [1, 3]
+        gkey, take = q.pop_batch(64)
+        assert gkey[0] == b and len(q) == 0
+        assert q.pop_batch(64) is None
+
+    def test_pop_batch_occupancy_beats_age(self):
+        a = BucketKey("batched", "jnp", 1, (8, 8), 16, 16, 3, "int32",
+                      None, None, 5, (), 0)
+        b = a._replace(height=32)
+        q = AdmissionQueue()
+        q.push(self._pend(1, a))                       # oldest
+        q.push(self._pend(2, b, n_trials=64))          # full batch
+        gkey, take = q.pop_batch(64)
+        assert gkey[0] == b                            # occupancy wins
+        gkey, take = q.pop_batch(64)
+        assert gkey[0] == a
+
+    def test_pop_batch_respects_trial_cap_but_never_starves(self):
+        a = BucketKey("batched", "jnp", 1, (8, 8), 16, 16, 3, "int32",
+                      None, None, 5, (), 0)
+        q = AdmissionQueue()
+        q.push(self._pend(1, a, n_trials=6))
+        q.push(self._pend(2, a, n_trials=6))
+        _, take = q.pop_batch(8)           # 6 fits, 6+6 does not
+        assert [p.seq for p in take] == [1]
+        _, take = q.pop_batch(4)           # over-cap request still runs
+        assert [p.seq for p in take] == [2]
+
+
+# ------------------------------ cache -------------------------------------- #
+
+class TestEngineCache:
+    def _entry(self):
+        return CompiledEngine(key=None, params=None, dom=np.zeros(1),
+                              kind="vmap", chunk_fn=lambda: None,
+                              init_fn=lambda: None, counts_fn=lambda: None)
+
+    def test_hit_miss_lru_eviction(self):
+        c = EngineCache(max_entries=2)
+        e1, hit = c.get_or_build("k1", self._entry)
+        assert not hit and e1.key == "k1"
+        _, hit = c.get_or_build("k1", self._entry)
+        assert hit
+        c.get_or_build("k2", self._entry)
+        c.get_or_build("k1", self._entry)  # refresh k1 to MRU
+        c.get_or_build("k3", self._entry)  # evicts k2 (LRU)
+        assert "k2" not in c and "k1" in c and "k3" in c
+        acct = c.accounting()
+        assert acct == {"entries": 2, "max_entries": 2, "hits": 2,
+                        "misses": 3, "evictions": 1, "retraces": 0,
+                        "hit_rate": 2 / 5}
+
+    def test_retrace_counter_ignores_first_batch(self):
+        c = EngineCache()
+        e, _ = c.get_or_build("k", self._entry)
+        n = [0]
+        e.jit_fns = (type("F", (), {"_cache_size":
+                                    staticmethod(lambda: n[0])})(),)
+        n[0] = 1
+        c.note_run(e)          # first batch: expected compile, no retrace
+        assert c.retraces == 0
+        c.note_run(e)          # cache static: still none
+        assert c.retraces == 0
+        n[0] = 2
+        c.note_run(e)          # grew on a warm entry: retrace
+        assert c.retraces == 1
+
+
+# ------------------------------ server ------------------------------------- #
+
+@pytest.fixture(scope="module")
+def server():
+    """One warm server shared by the module (compiles are the tax)."""
+    return ScenarioServer(max_batch_trials=64, cache_entries=8)
+
+
+class TestServer:
+    def test_packed_batch_bit_identical_to_direct_runs(self, server):
+        """Two same-bucket requests with different seeds AND different MCS
+        budgets share one batch; each response equals its own direct
+        ``run_trials`` call bit-for-bit (observables included — park3
+        streams densities + interface_length by default)."""
+        ra, rb = req16(seed=3, mcs=10, rid="pk-a"), \
+            req16(seed=9, mcs=20, rid="pk-b")
+        resps = server.serve([ra, rb])
+        assert [r.ok for r in resps] == [True, True]
+        assert resps[0].bucket == resps[1].bucket
+        assert resps[0].scenario_key == resps[1].scenario_key
+        assert server.accounting()["batches"] >= 1
+        assert_trial_results_equal(resps[0].result, direct_trials(ra))
+        assert_trial_results_equal(resps[1].result, direct_trials(rb))
+
+    def test_early_exit_parity(self, server):
+        """A tiny lattice with a long budget reaches stasis early; the
+        server's boundary-frozen statistics must match the direct run's
+        early-exit exactly (mcs_completed included)."""
+        r = SimRequest("park3", engine=ENGINE,
+                       run={"height": 8, "length": 8, "mcs": 200,
+                            "chunk_mcs": 10, "seed": 5,
+                            "observables": ()},
+                       n_trials=2, id="early")
+        resp = server(r)
+        assert resp.ok
+        assert_trial_results_equal(resp.result, direct_trials(r))
+
+    def test_cache_hit_no_retrace_on_repeat_bucket(self, server):
+        """Same bucket, new seeds/budgets, separate drains: the second
+        batch must HIT the cache and must not retrace (same padded
+        shape + same chunk schedule => the jitted chunk is reused)."""
+        c0 = server.accounting()["cache"]
+        r1 = server(req16(seed=21, mcs=10, rid="nr-a"))
+        c1 = server.accounting()["cache"]
+        r2 = server(req16(seed=22, mcs=20, rid="nr-b"))
+        c2 = server.accounting()["cache"]
+        assert r1.ok and r2.ok
+        assert r2.cache_hit
+        assert c2["hits"] == c1["hits"] + 1
+        assert c2["misses"] == c1["misses"]
+        assert c2["retraces"] == c0["retraces"]
+        assert r2.timing["compile_s"] == 0.0
+
+    def test_mixed_buckets_in_one_drain_pack_per_group(self, server):
+        """3 scenarios x 2 extents in one submission wave: groups batch
+        independently; every response bit-matches its direct run."""
+        reqs = [
+            req16(seed=31, rid="mx1"),
+            req16(seed=32, mcs=20, rid="mx2"),
+            req16(seed=33, scenario="zhong_density", rid="mx3"),
+            req16(seed=34, scenario="zhong_density", rid="mx4"),
+            SimRequest("nspecies5", engine=ENGINE,
+                       run=dict(RUN16, seed=35, height=32), n_trials=1,
+                       id="mx5"),
+            SimRequest("nspecies5", engine=ENGINE,
+                       run=dict(RUN16, seed=36, height=32), n_trials=2,
+                       id="mx6"),
+        ]
+        before = server.accounting()["batches"]
+        resps = server.serve(reqs)
+        assert all(r.ok for r in resps)
+        # 3 groups (park3/16, zhong/16, nspecies5/32) -> 3 batches
+        assert server.accounting()["batches"] == before + 3
+        for req, resp in zip(reqs, resps):
+            assert_trial_results_equal(resp.result, direct_trials(req))
+        assert server.accounting()["dropped"] == 0
+
+    def test_single_lattice_path_matches_simulate(self, server):
+        """The non-vmappable ``sharded`` engine routes to the
+        single-lattice path: bit-identical to a direct ``simulate``."""
+        sc = make_scenario("park3")
+        ec = EngineConfig(engine="sharded", shard_grid=(1, 1), tile=(8, 8))
+        rc = RunConfig(height=16, length=16, mcs=10, chunk_mcs=5, seed=4,
+                       observables=())
+        resp = server(SimRequest(sc, engine=ec, run=rc, id="sg1"))
+        assert resp.ok and resp.kind == "single"
+        ref = simulate(sc, engine=ec, run=rc)
+        np.testing.assert_array_equal(resp.result.grid, ref.grid)
+        np.testing.assert_array_equal(resp.result.densities, ref.densities)
+        assert resp.result.mcs_completed == ref.mcs_completed
+        assert resp.result.stasis_mcs == ref.stasis_mcs
+
+    def test_progress_events_stream_chunk_boundaries(self, server):
+        rid = server.submit(req16(seed=41, mcs=20, rid="prog1"))
+        assert server.progress(rid) == []       # nothing ran yet
+        server.drain()
+        events = server.progress(rid)
+        assert [e["mcs"] for e in events][-1] == 20
+        assert all(e["n_trials"] == 2 for e in events)
+        assert events[-1]["done"]
+        assert "observables" in events[-1]      # park3 streams by default
+
+    def test_admission_rails_answer_never_drop(self, server):
+        errs = server.serve([
+            {"scenario": "park3", "n_trials": 0, "id": "e-zero"},
+            {"scenario": "park3", "n_trials": 2, "id": "e-single",
+             "engine": {"engine": "sharded", "shard_grid": [1, 1],
+                        "tile": [8, 8]},
+             "run": RUN16},
+            {"scenario": "park3", "n_trials": 1, "id": "e-ring",
+             "engine": ENGINE,
+             "run": dict(RUN16, obs_capacity=2)},
+        ])
+        assert [e.ok for e in errs] == [False, False, False]
+        assert "n_trials" in errs[0].error
+        assert "not vmappable" in errs[1].error
+        assert "obs_capacity" in errs[2].error
+        assert server.accounting()["dropped"] == 0
+
+    def test_duplicate_id_answered_without_clobbering_original(self,
+                                                               server):
+        r1 = server(req16(seed=51, rid="dup"))
+        assert r1.ok
+        rid = server.submit(req16(seed=52, rid="dup"))
+        assert rid != "dup"                      # answered under a fresh id
+        resp = server.response(rid)
+        assert resp is not None and not resp.ok
+        assert "duplicate" in resp.error
+        assert server.response("dup").ok         # original intact
+
+    def test_responses_in_submit_order_and_accounting_consistent(self,
+                                                                 server):
+        acct = server.accounting()
+        assert acct["requests"] == acct["responded"] + acct["pending"]
+        assert acct["dropped"] == 0
+        assert acct["latency"]["total"]["count"] >= 1
+        assert 0.0 < acct["cache"]["hit_rate"] <= 1.0
+        ids = [r.id for r in server.responses()]
+        assert ids == [i for i in server._order if i in server._responses]
+
+
+# ------------------------------ http adapter ------------------------------- #
+
+def test_http_adapter_roundtrip(server):
+    from repro.serve.httpd import serve_http
+    httpd, thread = serve_http(server, port=0, background=True)
+    try:
+        base = "http://127.0.0.1:%d" % httpd.server_address[1]
+
+        def post(path, payload=None):
+            data = json.dumps(payload).encode() if payload is not None \
+                else b""
+            r = urllib.request.Request(base + path, data=data,
+                                       method="POST")
+            with urllib.request.urlopen(r) as f:
+                return json.loads(f.read())
+
+        def get(path):
+            with urllib.request.urlopen(base + path) as f:
+                return json.loads(f.read())
+
+        assert get("/healthz") == {"ok": True}
+        wire = req16(seed=61, rid="http1").to_wire()
+        assert post("/submit", wire) == {"ids": ["http1"]}
+        assert post("/drain")["answered"] >= 1
+        resp = get("/response?id=http1")
+        assert resp["ok"] and resp["kind"] == "trials"
+        assert resp["result"]["n_trials"] == 2
+        assert get("/progress?id=http1")["events"]
+        assert get("/accounting")["dropped"] == 0
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+
+# ------------------------------ loadgen ------------------------------------ #
+
+class TestLoadgen:
+    def test_synthetic_trace_deterministic_and_mixed(self):
+        a, b = loadgen.synthetic_trace(10, 0), loadgen.synthetic_trace(10, 0)
+        assert a == b and len(a) == 10
+        scenarios = {r["scenario"] for r in a}
+        extents = {(r["run"]["height"], r["run"]["length"]) for r in a}
+        assert len(scenarios) >= 3 and len(extents) >= 2
+        assert loadgen.synthetic_trace(10, 1) != a   # seed moves seeds
+
+    def test_trace_file_roundtrip(self, tmp_path):
+        path = str(tmp_path / "t.jsonl")
+        reqs = loadgen.synthetic_trace(4, 2)
+        loadgen.write_trace(path, reqs)
+        with open(path) as f:
+            assert len(f.read().strip().splitlines()) == 4
+        assert loadgen.read_trace(path) == reqs
+
+    def test_replay_report_and_gate_row(self, server, tmp_path):
+        reqs = [req16(seed=71, rid="lg1").to_wire(),
+                req16(seed=72, mcs=20, rid="lg2").to_wire()]
+        c0 = server.accounting()["cache"]
+        report = loadgen.replay(server, reqs, waves=2)
+        assert report["schema"] == loadgen.REPORT_SCHEMA
+        assert report["n_requests"] == 4 and report["n_ok"] == 4
+        assert report["dropped"] == 0
+        assert report["updates"] > 0 and report["updates_per_s"] > 0
+        # wave 2 re-forms the bucket -> at least one cache hit
+        assert report["cache"]["hits"] >= c0["hits"] + 1
+        assert loadgen.check_report(report) == []
+        row = loadgen.gate_row(report)
+        assert row["family"] == "serve" and row["dropped"] == 0
+        assert row["requests_per_s"] > 0 and row["us_per_call"] > 0
+        from benchmarks import bench_gate as bg
+        assert bg.validate_gate_row(row) == []
+
+    def test_check_report_flags_problems(self):
+        bad = {"schema": "nope", "dropped": 1, "n_error": 2,
+               "cache": {"hits": 0}}
+        problems = loadgen.check_report(bad)
+        assert len(problems) == 4
+        joined = " ".join(problems)
+        assert "schema" in joined and "dropped=1" in joined
+        assert "n_error=2" in joined and "hits=0" in joined
+
+
+def test_committed_smoke_trace_is_mixed_and_packs():
+    """The CI serve-smoke trace: >= 3 scenarios x >= 2 lattice extents,
+    and every admission group holds >= 2 requests, so the queue actually
+    packs (admission only — the replay itself runs in CI)."""
+    import os
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    reqs = loadgen.read_trace(
+        os.path.join(repo, "examples", "traces", "smoke.jsonl"))
+    assert len(reqs) == 10
+    assert len({r["scenario"] for r in reqs}) >= 3
+    assert len({(r["run"]["height"], r["run"]["length"])
+                for r in reqs}) >= 2
+    srv = ScenarioServer()
+    groups = {}
+    for i, r in enumerate(reqs):
+        pend = srv._admit(i + 1, parse_request(r))
+        groups.setdefault(pend.group, []).append(pend)
+    assert len(groups) >= 4
+    assert all(len(v) >= 2 for v in groups.values()), {
+        k[0].short(): len(v) for k, v in groups.items()}
+
+
+# ------------------------------ CLI ---------------------------------------- #
+
+class TestCli:
+    def test_emit_trace_roundtrip(self, tmp_path):
+        from repro.launch.serve import main
+        path = str(tmp_path / "trace.jsonl")
+        assert main(["--emitTrace", path, "--synthetic", "4"]) == 0
+        assert loadgen.read_trace(path) == loadgen.synthetic_trace(4, 0)
+
+    def test_replay_check_and_report(self, tmp_path, capsys):
+        from repro.launch.serve import main
+        trace = str(tmp_path / "t.jsonl")
+        report = str(tmp_path / "report.json")
+        loadgen.write_trace(trace, [req16(seed=81, rid="c1").to_wire(),
+                                    req16(seed=82, rid="c2").to_wire()])
+        rc = main(["--trace", trace, "--waves", "2",
+                   "--report", report, "--check"])
+        captured = capsys.readouterr()
+        assert rc == 0, captured.err
+        with open(report) as f:
+            rep = json.load(f)
+        assert rep["schema"] == loadgen.REPORT_SCHEMA
+        assert rep["n_requests"] == 4 and rep["cache"]["hits"] >= 1
+        assert "req/s" in captured.out
+
+    def test_help_is_escg_not_lm_scaffold(self):
+        from repro.launch.serve import build_parser
+        text = build_parser().format_help()
+        assert "scenario server" in text
+        for lm_word in ("granite", "prefill", "decode"):
+            assert lm_word not in text.lower()
+
+
+def test_lm_scaffold_quarantined():
+    """Satellite: train.py / train_lib.py are marked as quarantined
+    LM-scaffold appendix code, and the launch package advertises only
+    ESCG entry points."""
+    import os
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def head(path):
+        with open(os.path.join(repo, path)) as f:
+            return f.read(600)
+
+    assert "LM-scaffold appendix" in head("src/repro/launch/train.py")
+    assert "NOT an ESCG entry point" in head("src/repro/launch/train.py")
+    assert "LM-scaffold appendix" in head("src/repro/runtime/train_lib.py")
+    init = head("src/repro/launch/__init__.py")
+    assert "escg_run" in init and "quarantined" in init
+    with open(os.path.join(repo, "pyproject.toml")) as f:
+        pyproject = f.read()
+    assert 'escg_serve = "repro.launch.serve:main"' in pyproject
+
+
+# --------------------- multi-device no-retrace (slow) ---------------------- #
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ["sublattice", "sharded", "sharded_pod"])
+def test_no_retrace_and_bit_identity_multidevice(subproc, engine):
+    """On 8 fake devices: two same-bucket requests (different seeds and
+    MCS budgets) compile exactly once — one miss, one hit, zero
+    retraces — and each response is bit-identical to its direct
+    ``run_trials`` / ``simulate`` call."""
+    code = """
+        import json
+        import numpy as np
+        from repro.core.scenarios import (EngineConfig, RunConfig,
+                                          make_scenario)
+        from repro.core.simulation import simulate
+        from repro.core.trials import run_trials
+        from repro.serve import ScenarioServer, SimRequest
+
+        engine = %r
+        single = engine == "sharded"
+        sc = make_scenario("park3")
+        if engine == "sharded_pod":
+            ec = EngineConfig(engine=engine, mesh_shape=(2, 2, 2),
+                              tile=(8, 8))
+        elif engine == "sharded":
+            ec = EngineConfig(engine=engine, shard_grid=(2, 2),
+                              tile=(8, 8))
+        else:
+            ec = EngineConfig(engine=engine, tile=(8, 8))
+        def rc(seed, mcs):
+            return RunConfig(height=32, length=32, mcs=mcs, chunk_mcs=4,
+                             seed=seed, observables=())
+        n = 1 if single else 4
+        ra = SimRequest(sc, engine=ec, run=rc(3, 8), n_trials=n, id="a")
+        rb = SimRequest(sc, engine=ec, run=rc(9, 16), n_trials=n, id="b")
+
+        srv = ScenarioServer()
+        resp_a = srv(ra)
+        resp_b = srv(rb)
+        assert resp_a.ok, resp_a.error
+        assert resp_b.ok, resp_b.error
+        cache = srv.accounting()["cache"]
+        assert cache["misses"] == 1, cache
+        assert cache["hits"] == 1, cache
+        assert cache["retraces"] == 0, cache
+        assert resp_b.cache_hit and not resp_a.cache_hit
+
+        for req, resp in ((ra, resp_a), (rb, resp_b)):
+            if single:
+                ref = simulate(sc, engine=ec, run=req.run)
+                np.testing.assert_array_equal(resp.result.grid, ref.grid)
+                np.testing.assert_array_equal(resp.result.densities,
+                                              ref.densities)
+                assert resp.result.mcs_completed == ref.mcs_completed
+            else:
+                ref = run_trials(sc, n_trials=req.n_trials, engine=ec,
+                                 run=req.run)
+                np.testing.assert_array_equal(resp.result.survival,
+                                              ref.survival)
+                np.testing.assert_array_equal(resp.result.densities,
+                                              ref.densities)
+                np.testing.assert_array_equal(resp.result.stasis_mcs,
+                                              ref.stasis_mcs)
+                np.testing.assert_array_equal(resp.result.extinction_mcs,
+                                              ref.extinction_mcs)
+                assert resp.result.mcs_completed == ref.mcs_completed
+        print(json.dumps({"ok": True, "cache": cache}))
+    """ % (engine,)
+    out = subproc(code, 8)
+    assert json.loads(out.strip().splitlines()[-1])["ok"]

@@ -70,7 +70,15 @@ def test_train_cli_with_compression(tmp_path):
 
 
 @pytest.mark.slow
-def test_serve_cli_smoke():
-    out = run_cli(["repro.launch.serve", "--arch", "granite-3-8b",
-                   "--batch", "2", "--prompt_len", "16", "--gen_len", "8"])
-    assert "tok/s" in out
+def test_serve_cli_smoke(tmp_path):
+    """The escg_serve entry point end-to-end: synthetic trace, two waves,
+    acceptance checks (zero dropped / zero errors / >= 1 cache hit)."""
+    report = str(tmp_path / "report.json")
+    out = run_cli(["repro.launch.serve", "--synthetic", "2", "--waves",
+                   "2", "--report", report, "--check"])
+    assert "req/s" in out and "dropped=0" in out
+    with open(report) as f:
+        rep = json.load(f)
+    assert rep["schema"] == "escg-serve-report/v1"
+    assert rep["n_requests"] == 4 and rep["n_error"] == 0
+    assert rep["cache"]["hits"] >= 1
