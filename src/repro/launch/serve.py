@@ -42,6 +42,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="trials packed per device batch (default 64)")
     ap.add_argument("--cacheEntries", type=int, default=8,
                     help="LRU compiled-engine cache entries (default 8)")
+    ap.add_argument("--maxResponses", type=int, default=4096,
+                    help="answered responses retained before oldest-first "
+                         "eviction; clients can POST /ack to release "
+                         "eagerly (default 4096)")
     ap.add_argument("--report", type=str, default=None,
                     help="write the replay report JSON here")
     ap.add_argument("--check", action="store_true",
@@ -69,7 +73,8 @@ def main(argv=None) -> int:
         return 0
 
     server = ScenarioServer(max_batch_trials=args.maxBatchTrials,
-                            cache_entries=args.cacheEntries)
+                            cache_entries=args.cacheEntries,
+                            max_responses=args.maxResponses)
 
     if args.http:
         from repro.serve.httpd import serve_http

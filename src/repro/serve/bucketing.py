@@ -111,10 +111,17 @@ class AdmissionQueue:
         self._n_pending += 1
 
     def depth(self) -> Dict[str, int]:
-        """Trials queued per group (accounting surface)."""
-        return {f"{b.short()}@{sk[:8]}":
-                sum(p.req.n_trials for p in plist)
-                for (b, sk, _), plist in self._groups.items()}
+        """Trials queued per group (accounting surface). The key carries
+        the FULL group identity — bucket, full scenario hash and the
+        strict-schedule token — so two live groups can never collapse
+        into (and overwrite) one reported entry."""
+        out: Dict[str, int] = {}
+        for (b, sk, sched), plist in self._groups.items():
+            key = f"{b.short()}@{sk}"
+            if sched is not None:
+                key += f"/sched{sched}"
+            out[key] = self._trials(plist)
+        return out
 
     def _trials(self, plist: List[Pending]) -> int:
         return sum(max(1, p.req.n_trials) for p in plist)

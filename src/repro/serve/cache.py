@@ -9,16 +9,22 @@ revisits a (shape, physics) pair pays the trace exactly once until LRU
 pressure evicts it.
 
 Retrace detection: each entry snapshots the jit caches of its compiled
-callables (``PjitFunction._cache_size``). A grown snapshot on an entry
-that already served a batch means XLA traced again under the same key —
-a served-layer invariant violation surfaced as the ``retraces`` counter
-(asserted zero by tests/test_serve.py)."""
+callables (``PjitFunction._cache_size``). The chunk callables are jitted
+with ``static_argnames=('n_mcs',)``, so the FIRST batch that packs a new
+step size legitimately grows the cache — the executor reports every
+static length it runs (``note_chunk_length``) and ``note_run`` nets those
+expected grows out. What remains — a previously-seen shape tracing again
+on an entry that already served a batch — is a served-layer invariant
+violation surfaced as the ``retraces`` counter (asserted zero by
+tests/test_serve.py); legitimate new-length compiles are counted
+separately as ``length_traces`` and their wall time is handed back to the
+server so it lands in ``compile_s``, not ``run_s``."""
 from __future__ import annotations
 
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Set, Tuple
 
 import numpy as np
 
@@ -55,7 +61,10 @@ class CompiledEngine:
     jit_fns: Tuple[Any, ...] = ()  # callables watched for retraces
     build_s: float = 0.0           # wall time of the build (miss cost)
     runs: int = 0                  # batches served
+    seen_chunk_lengths: Set[int] = field(default_factory=set)
     _trace_mark: int = 0
+    _new_lengths: int = 0          # new static lengths since last note_run
+    _new_trace_s: float = 0.0      # their trace+compile wall time
 
     def trace_count(self) -> int:
         return sum(_jit_cache_size(f) for f in self.jit_fns)
@@ -67,6 +76,26 @@ class CompiledEngine:
         """True when a jit cache grew since the last ``mark_traced``."""
         return self.trace_count() > self._trace_mark
 
+    def note_chunk_length(self, m: int, wall_s: float = 0.0) -> bool:
+        """Record one chunk call at static length ``m``; True when this
+        entry had not traced that length yet. ``wall_s`` is the call's
+        wall time (trace + compile dominate a first-use call — jit
+        dispatch is async, so device execution lands in the later
+        blocking read, not here)."""
+        if m in self.seen_chunk_lengths:
+            return False
+        self.seen_chunk_lengths.add(m)
+        self._new_lengths += 1
+        self._new_trace_s += wall_s
+        return True
+
+    def consume_new_lengths(self) -> Tuple[int, float]:
+        """(count, wall seconds) of new static chunk lengths recorded
+        since the last call; resets both."""
+        out = (self._new_lengths, self._new_trace_s)
+        self._new_lengths, self._new_trace_s = 0, 0.0
+        return out
+
 
 @dataclass
 class EngineCache:
@@ -76,6 +105,7 @@ class EngineCache:
     misses: int = 0
     evictions: int = 0
     retraces: int = 0
+    length_traces: int = 0         # legitimate new-chunk-length compiles
     _entries: "OrderedDict[CacheKey, CompiledEngine]" = field(
         default_factory=OrderedDict)
 
@@ -106,14 +136,24 @@ class EngineCache:
             self.evictions += 1
         return entry, False
 
-    def note_run(self, entry: CompiledEngine) -> None:
-        """Post-batch bookkeeping: count a retrace if any watched jit
-        cache grew on an entry that had already served traffic (the
-        first batch's traces are the expected compile, not a retrace)."""
-        if entry.runs > 0 and entry.retraced():
-            self.retraces += 1
+    def note_run(self, entry: CompiledEngine) -> Tuple[int, float]:
+        """Post-batch bookkeeping. The executor reports each static chunk
+        length it ran (``note_chunk_length``); a first use of a new
+        length is an EXPECTED jit-cache grow — mixed-budget packing is
+        advertised behaviour — so the retrace counter only fires when the
+        watched caches grew BEYOND those, i.e. a previously-seen shape
+        traced again on an entry that had already served traffic (the
+        first batch's traces are the expected compile, never a retrace).
+        Returns ``(new_lengths, trace_s)`` so the caller can bill
+        first-use chunk traces as compile time rather than run time."""
+        new_lengths, trace_s = entry.consume_new_lengths()
+        if entry.runs > 0:
+            self.length_traces += new_lengths
+            if entry.trace_count() > entry._trace_mark + new_lengths:
+                self.retraces += 1
         entry.runs += 1
         entry.mark_traced()
+        return new_lengths, trace_s
 
     def accounting(self) -> Dict[str, Any]:
         return {
@@ -123,6 +163,7 @@ class EngineCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "retraces": self.retraces,
+            "length_traces": self.length_traces,
             "hit_rate": (self.hits / (self.hits + self.misses)
                          if (self.hits + self.misses) else 0.0),
         }

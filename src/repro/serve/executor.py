@@ -31,6 +31,7 @@ for line against the entry's cached compiled chunk.
 """
 from __future__ import annotations
 
+import time
 from bisect import bisect_right
 from dataclasses import dataclass, field as dc_field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -224,11 +225,19 @@ def run_packed(entry: CompiledEngine, pends: Sequence[Pending],
     while active:
         nxt = min(js.next_boundary(done) for js in active)
         m = nxt - done
+        # n_mcs is a static argname: first use of a new step size traces
+        # a new chunk variant inside this call — time it so the cache can
+        # net the expected jit-cache grow out of retrace detection and
+        # the server can bill it as compile_s rather than run_s
+        new_len = m not in entry.seen_chunk_lengths
+        t_call = time.perf_counter() if new_len else 0.0
         if obs_on:
             grids, keys, ring, pos, cnts, alive, kept, att = chunk_fn(
                 grids, keys, ring, pos, m)
         else:
             grids, keys, cnts, alive, kept, att = chunk_fn(grids, keys, m)
+        if new_len:
+            entry.note_chunk_length(m, time.perf_counter() - t_call)
         alive_h = np.asarray(alive)              # (n_pad, m, S) bool
         cnts_h = np.asarray(cnts)
         kept_h, att_h = np.asarray(kept), np.asarray(att)
@@ -323,15 +332,23 @@ def run_single(entry: CompiledEngine, pend: Pending,
 
     while mcs_done < n_mcs_total:
         m = min(p.chunk_mcs, n_mcs_total - mcs_done)
+        # same static-n_mcs accounting as run_packed: a budget that is
+        # not a chunk multiple traces one extra tail-length variant
+        new_len = m not in entry.seen_chunk_lengths
+        t_call = time.perf_counter() if new_len else 0.0
         if obs_on:
             grid, key, ring, pos, kept, att = chunk_fn(grid, key, ring,
                                                        pos, m)
+        else:
+            grid, key, cnts, kept, att = chunk_fn(grid, key, m)
+        if new_len:
+            entry.note_chunk_length(m, time.perf_counter() - t_call)
+        if obs_on:
             rows_h = obs_mod.ring_flush(np.asarray(ring), mcs_done,
                                         mcs_done + m)
             rows_all.append(rows_h)
             cnts_h = pipe.counts_from_rows(rows_h, p.species)
         else:
-            grid, key, cnts, kept, att = chunk_fn(grid, key, m)
             cnts_h = np.asarray(cnts)
         hist.append(cnts_h)
         kept_total += int(kept)

@@ -10,6 +10,7 @@ Routes (all JSON):
 * ``POST /submit``  — one request object or a list; replies with ids
 * ``POST /drain``   — run the scheduler until the queue is empty
 * ``POST /step``    — run exactly one batch
+* ``POST /ack?id=<rid>``       — release one retained response
 * ``GET /response?id=<rid>``   — the response for one request
 * ``GET /progress?id=<rid>``   — per-chunk progress events
 * ``GET /accounting``          — serving counters
@@ -73,6 +74,14 @@ def _make_handler(server: ScenarioServer):
             return self._reply(404, {"error": f"unknown path {url.path}"})
 
         def do_POST(self):
+            url = urlparse(self.path)
+            if url.path == "/ack":
+                rid = parse_qs(url.query).get("id", [""])[0]
+                resp = server.ack(rid)
+                if resp is None:
+                    return self._reply(404, {"error": f"no response for "
+                                                      f"id {rid!r}"})
+                return self._reply(200, resp.to_wire())
             if self.path == "/submit":
                 try:
                     payload = self._read_json()

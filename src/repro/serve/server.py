@@ -17,14 +17,26 @@ it; execution itself is deliberately serial — there is one accelerator.
 Per-chunk progress events (``progress(id)``) stream the boundary-level
 state of a running request: MCS reached, trials in stasis, and — when
 observables are on — that chunk's finalized observable rows.
+
+Retention: a resident server must not grow without bound, so answered
+responses (and their progress events) are retained up to
+``max_responses`` — beyond that the oldest answered response is evicted
+(pending requests are never touched, and ``accounting()['responded']``
+counts cumulatively, so eviction never reads as a drop). Clients that
+want deterministic memory bounds ``ack(id)`` responses to release them
+eagerly. Latency statistics are running aggregates (count / mean / max
+over the whole lifetime, percentiles over a bounded recent window), not
+raw per-request lists.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional, Sequence, Union
 
+import jax
 import numpy as np
 
 from ..core import dominance as dom_mod
@@ -39,21 +51,41 @@ from .protocol import SimRequest, SimResponse, parse_request
 __all__ = ["ScenarioServer"]
 
 
-def _latency_stats(xs: List[float]) -> Dict[str, float]:
-    if not xs:
-        return {"count": 0}
-    a = np.asarray(xs, dtype=np.float64)
-    return {"count": int(a.size), "mean_s": float(a.mean()),
-            "p50_s": float(np.percentile(a, 50)),
-            "p95_s": float(np.percentile(a, 95)),
-            "max_s": float(a.max())}
+class _LatencyAgg:
+    """Bounded-memory latency statistics for a long-lived server: count,
+    running mean and max cover the whole lifetime; percentiles come from
+    the last ``window`` samples (a deque, so memory is O(window) however
+    long the server runs)."""
+
+    def __init__(self, window: int = 1024) -> None:
+        self.count = 0
+        self.mean = 0.0
+        self.max = 0.0
+        self.recent: "deque[float]" = deque(maxlen=window)
+
+    def add(self, x: float) -> None:
+        self.count += 1
+        self.mean += (x - self.mean) / self.count
+        self.max = max(self.max, x)
+        self.recent.append(x)
+
+    def stats(self) -> Dict[str, float]:
+        if not self.count:
+            return {"count": 0}
+        a = np.asarray(self.recent, dtype=np.float64)
+        return {"count": self.count, "mean_s": float(self.mean),
+                "p50_s": float(np.percentile(a, 50)),
+                "p95_s": float(np.percentile(a, 95)),
+                "max_s": float(self.max)}
 
 
 class ScenarioServer:
     """Continuously-batched ESCG scenario server (in-process transport).
 
     ``max_batch_trials`` caps the trials packed into one device batch;
-    ``cache_entries`` bounds the LRU compiled-engine cache. Typical use::
+    ``cache_entries`` bounds the LRU compiled-engine cache;
+    ``max_responses`` bounds retained answered responses (oldest evicted
+    first — see the module docstring's retention policy). Typical use::
 
         srv = ScenarioServer()
         rid = srv.submit({"scenario": "park3", "n_trials": 4,
@@ -63,8 +95,10 @@ class ScenarioServer:
     """
 
     def __init__(self, max_batch_trials: int = 64,
-                 cache_entries: int = 8) -> None:
+                 cache_entries: int = 8,
+                 max_responses: int = 4096) -> None:
         self.max_batch_trials = int(max_batch_trials)
+        self.max_responses = max(1, int(max_responses))
         self._queue = AdmissionQueue()
         self._cache = EngineCache(max_entries=int(cache_entries))
         self._lock = threading.RLock()
@@ -73,12 +107,14 @@ class ScenarioServer:
         self._order: List[str] = []      # response ids in submit order
         self._seq = 0
         self._n_requests = 0
+        self._n_responded = 0            # cumulative (survives eviction)
         self._n_errors = 0
+        self._n_evicted = 0
         self._n_batches = 0
         self._n_packed_trials = 0
-        self._lat_total: List[float] = []
-        self._lat_queue: List[float] = []
-        self._lat_run: List[float] = []
+        self._lat_total = _LatencyAgg()
+        self._lat_queue = _LatencyAgg()
+        self._lat_run = _LatencyAgg()
 
     # ------------------------------ admission -------------------------- #
 
@@ -120,6 +156,16 @@ class ScenarioServer:
         p = params.validate()
         if dom is None:
             dom = dom_mod.circulant(p.species)
+        n_dev = jax.device_count()
+        for knob, layout in (("mesh_shape", p.mesh_shape),
+                             ("shard_grid", p.shard_grid)):
+            if layout is not None:
+                need = int(np.prod(np.asarray(layout)))
+                if need > n_dev:
+                    raise ValueError(
+                        f"{knob} {tuple(layout)} needs {need} devices but "
+                        f"this host has {n_dev}: the engine build would "
+                        "fail, so the request is rejected at admission")
         kind = engine_kind(p.engine)
         if kind == "single" and req.n_trials != 1:
             raise ValueError(
@@ -156,14 +202,21 @@ class ScenarioServer:
             if popped is None:
                 return 0
             (bucket, skey, _sched), pends = popped
-            t_start = time.perf_counter()
+            t_start = t_run = time.perf_counter()
             first = pends[0]
-            entry, hit = self._cache.get_or_build(
-                (bucket, skey),
-                lambda: build_entry(first.params, first.dom))
-            compile_s = 0.0 if hit else entry.build_s
-            t_run = time.perf_counter()
+            entry = None
+            hit = False
+            compile_s = 0.0
             try:
+                # inside the try: a failed engine build (mesh infeasible
+                # on this host, OOM, ...) must still ANSWER every popped
+                # request — the serving contract is answered, never
+                # dropped, and drain() must not raise
+                entry, hit = self._cache.get_or_build(
+                    (bucket, skey),
+                    lambda: build_entry(first.params, first.dom))
+                compile_s = 0.0 if hit else entry.build_s
+                t_run = time.perf_counter()
                 if entry.kind == "single":
                     results = [(pd, run_single(entry, pd, emit=self._emit))
                                for pd in pends]
@@ -172,8 +225,14 @@ class ScenarioServer:
                     results = run_packed(entry, pends, emit=self._emit)
                     kind = "trials"
             except Exception as e:
-                run_s = time.perf_counter() - t_run
-                self._cache.note_run(entry)
+                now = time.perf_counter()
+                if entry is None:      # build failed: all time is compile
+                    compile_s, run_s = now - t_start, 0.0
+                else:
+                    run_s = now - t_run
+                    _, trace_s = self._cache.note_run(entry)
+                    compile_s += trace_s
+                    run_s = max(0.0, run_s - trace_s)
                 for pd in pends:
                     self._respond(SimResponse(
                         id=pd.req.id, ok=False, kind="error",
@@ -184,15 +243,19 @@ class ScenarioServer:
                         scenario_key=skey))
                 return len(pends)
             run_s = time.perf_counter() - t_run
-            self._cache.note_run(entry)
+            # a first use of a new packed step size traces a new chunk
+            # variant inside the run window: bill it as compile time
+            _, trace_s = self._cache.note_run(entry)
+            compile_s += trace_s
+            run_s = max(0.0, run_s - trace_s)
             self._n_batches += 1
             self._n_packed_trials += sum(max(1, pd.req.n_trials)
                                          for pd in pends)
             for pd, res in results:
                 queue_s = t_start - pd.t_submit
-                self._lat_queue.append(queue_s)
-                self._lat_run.append(run_s)
-                self._lat_total.append(time.perf_counter() - pd.t_submit)
+                self._lat_queue.add(queue_s)
+                self._lat_run.add(run_s)
+                self._lat_total.add(time.perf_counter() - pd.t_submit)
                 self._respond(SimResponse(
                     id=pd.req.id, ok=True, kind=kind, result=res,
                     timing={"queue_s": queue_s, "compile_s": compile_s,
@@ -215,7 +278,16 @@ class ScenarioServer:
         """Submit-all + drain convenience: responses in submit order."""
         ids = [self.submit(r) for r in requests]
         self.drain()
-        return [self._responses[i] for i in ids]
+        out = []
+        for i in ids:
+            resp = self._responses.get(i)
+            if resp is None:
+                raise RuntimeError(
+                    f"response {i!r} was evicted before collection: this "
+                    f"wave exceeded max_responses={self.max_responses}; "
+                    "raise it or replay in smaller waves")
+            out.append(resp)
+        return out
 
     def __call__(self, request: Union[str, dict, SimRequest]
                  ) -> SimResponse:
@@ -227,7 +299,20 @@ class ScenarioServer:
     def _respond(self, resp: SimResponse) -> None:
         if not resp.ok:
             self._n_errors += 1
+        self._n_responded += 1
         self._responses[resp.id] = resp
+        # retention: evict the oldest ANSWERED response (and its events)
+        # past max_responses; ids still pending in _order are skipped
+        while len(self._responses) > self.max_responses:
+            for i, rid in enumerate(self._order):
+                if rid in self._responses:
+                    del self._responses[rid]
+                    self._events.pop(rid, None)
+                    del self._order[i]
+                    self._n_evicted += 1
+                    break
+            else:
+                break
 
     def _emit(self, pend: Pending, event: dict) -> None:
         self._events.setdefault(pend.req.id, []).append(event)
@@ -235,6 +320,21 @@ class ScenarioServer:
     def response(self, rid: str) -> Optional[SimResponse]:
         with self._lock:
             return self._responses.get(rid)
+
+    def ack(self, rid: str) -> Optional[SimResponse]:
+        """Acknowledge one response: returns it (None when unknown or
+        already released) and frees its retained result + events, so a
+        long-lived client can bound the server's memory deterministically
+        instead of waiting for LRU eviction."""
+        with self._lock:
+            resp = self._responses.pop(rid, None)
+            if resp is not None:
+                self._events.pop(rid, None)
+                try:
+                    self._order.remove(rid)
+                except ValueError:
+                    pass
+            return resp
 
     def responses(self) -> List[SimResponse]:
         """All responses so far, in submit order."""
@@ -253,23 +353,28 @@ class ScenarioServer:
     def accounting(self) -> Dict[str, Any]:
         """Serving counters: every admitted request is either pending,
         answered ok, or answered with an error — ``dropped`` (admitted
-        but never answered while the queue is empty) must be zero."""
+        but never answered while the queue is empty) must be zero.
+        ``responded`` counts cumulatively; ``retained`` is how many
+        responses are currently held (``max_responses`` bound), so
+        acking or evicting a response never reads as a drop."""
         with self._lock:
             pending = len(self._queue)
-            responded = len(self._responses)
             return {
                 "requests": self._n_requests,
-                "responded": responded,
+                "responded": self._n_responded,
                 "errors": self._n_errors,
                 "pending": pending,
-                "dropped": self._n_requests - responded - pending,
+                "dropped": (self._n_requests - self._n_responded
+                            - pending),
+                "retained": len(self._responses),
+                "evicted": self._n_evicted,
                 "batches": self._n_batches,
                 "packed_trials": self._n_packed_trials,
                 "queue_depth": self._queue.depth(),
                 "cache": self._cache.accounting(),
                 "latency": {
-                    "total": _latency_stats(self._lat_total),
-                    "queue": _latency_stats(self._lat_queue),
-                    "run": _latency_stats(self._lat_run),
+                    "total": self._lat_total.stats(),
+                    "queue": self._lat_queue.stats(),
+                    "run": self._lat_run.stats(),
                 },
             }

@@ -9,6 +9,7 @@ retraces). Both are asserted here on the real engines; the composed CI
 job re-runs this suite on 8 fake devices.
 """
 import json
+import urllib.error
 import urllib.request
 
 import numpy as np
@@ -168,6 +169,22 @@ class TestBucketing:
         _, take = q.pop_batch(4)           # over-cap request still runs
         assert [p.seq for p in take] == [2]
 
+    def test_depth_keys_distinct_per_group(self):
+        """Groups differing only in the sched token (or sharing a hash
+        prefix) must not collapse into one queue-depth entry."""
+        a = BucketKey("batched", "jnp", 1, (8, 8), 16, 16, 3, "int32",
+                      None, None, 5, (), 0)
+        q = AdmissionQueue()
+        p1 = self._pend(1, a, n_trials=2, skey="deadbeef" + "0" * 56)
+        p2 = self._pend(2, a, n_trials=3, skey="deadbeef" + "0" * 56)
+        p2.sched = 10
+        p3 = self._pend(3, a, n_trials=1, skey="deadbeef" + "f" * 56)
+        for p in (p1, p2, p3):
+            q.push(p)
+        depth = q.depth()
+        assert len(depth) == 3              # sched + full hash both kept
+        assert sorted(depth.values()) == [1, 2, 3]
+
 
 # ------------------------------ cache -------------------------------------- #
 
@@ -190,7 +207,7 @@ class TestEngineCache:
         acct = c.accounting()
         assert acct == {"entries": 2, "max_entries": 2, "hits": 2,
                         "misses": 3, "evictions": 1, "retraces": 0,
-                        "hit_rate": 2 / 5}
+                        "length_traces": 0, "hit_rate": 2 / 5}
 
     def test_retrace_counter_ignores_first_batch(self):
         c = EngineCache()
@@ -205,6 +222,30 @@ class TestEngineCache:
         assert c.retraces == 0
         n[0] = 2
         c.note_run(e)          # grew on a warm entry: retrace
+        assert c.retraces == 1
+
+    def test_new_chunk_length_is_not_a_retrace(self):
+        """n_mcs is a static argname, so a warm entry's jit cache grows
+        by one for each NEW packed step size — an expected compile
+        (counted as length_traces, its wall time handed back for
+        compile_s billing), never a retrace. Growth beyond the reported
+        lengths still fires."""
+        c = EngineCache()
+        e, _ = c.get_or_build("k", self._entry)
+        n = [0]
+        e.jit_fns = (type("F", (), {"_cache_size":
+                                    staticmethod(lambda: n[0])})(),)
+        n[0] = 1
+        assert e.note_chunk_length(5, 0.25)          # first batch: m=5
+        c.note_run(e)
+        n[0] = 2
+        assert e.note_chunk_length(4, 0.125)         # warm entry, new m
+        assert not e.note_chunk_length(5)            # already traced
+        new, trace_s = c.note_run(e)
+        assert (new, trace_s) == (1, 0.125)
+        assert c.retraces == 0 and c.length_traces == 1
+        n[0] = 3                                     # grew with NO new m
+        _, _ = c.note_run(e)
         assert c.retraces == 1
 
 
@@ -327,6 +368,86 @@ class TestServer:
         assert "obs_capacity" in errs[2].error
         assert server.accounting()["dropped"] == 0
 
+    def test_mixed_budget_repeat_traffic_is_not_a_retrace(self):
+        """The executor packs by nearest boundary, so a repeat bucket can
+        run a step size the entry has not traced yet (mcs=6 then mcs=4
+        under chunk 5). That first-use trace is expected — zero retraces,
+        counted as length_traces, billed to compile_s — and the result
+        stays bit-identical to the direct run."""
+        srv = ScenarioServer()
+        run = dict(RUN16, chunk_mcs=5)
+        ra = SimRequest("park3", engine=ENGINE,
+                        run=dict(run, seed=91, mcs=6), n_trials=2,
+                        id="mb-a")
+        rb = SimRequest("park3", engine=ENGINE,
+                        run=dict(run, seed=92, mcs=4), n_trials=2,
+                        id="mb-b")
+        resp_a = srv(ra)
+        resp_b = srv(rb)
+        assert resp_a.ok and resp_b.ok
+        cache = srv.accounting()["cache"]
+        assert cache["retraces"] == 0, cache
+        assert cache["hits"] == 1 and cache["misses"] == 1
+        assert cache["length_traces"] >= 1          # m=4 traced on hit
+        assert resp_b.cache_hit
+        assert resp_b.timing["compile_s"] > 0.0     # trace billed here
+        assert_trial_results_equal(resp_a.result, direct_trials(ra))
+        assert_trial_results_equal(resp_b.result, direct_trials(rb))
+
+    def test_engine_build_failure_answers_every_request(self,
+                                                        monkeypatch):
+        """A build that passes admission but fails in step() must answer
+        every popped request with an error response — drain() returns
+        instead of raising, and accounting shows zero dropped."""
+        from repro.serve import server as server_mod
+        srv = ScenarioServer()
+
+        def boom(params, dom):
+            raise RuntimeError("engine build exploded")
+
+        monkeypatch.setattr(server_mod, "build_entry", boom)
+        ids = [srv.submit(req16(seed=95, rid="bf-a")),
+               srv.submit(req16(seed=96, rid="bf-b"))]
+        assert srv.drain() == 2                     # no exception
+        for rid in ids:
+            resp = srv.response(rid)
+            assert resp is not None and not resp.ok
+            assert "engine build exploded" in resp.error
+            assert resp.timing["compile_s"] >= 0.0
+        acct = srv.accounting()
+        assert acct["dropped"] == 0 and acct["errors"] == 2
+
+    def test_infeasible_mesh_rejected_at_admission(self):
+        """A device layout this host cannot satisfy is answered at
+        admission (it could only ever fail the engine build)."""
+        srv = ScenarioServer()
+        resp = srv({"scenario": "park3", "n_trials": 1, "id": "mesh1",
+                    "engine": {"engine": "sharded_pod",
+                               "mesh_shape": [64, 2, 2], "tile": [8, 8]},
+                    "run": RUN16})
+        assert not resp.ok and "devices" in resp.error
+        assert srv.accounting()["dropped"] == 0
+
+    def test_response_retention_bounded_and_ack(self):
+        """Retention: answered responses beyond max_responses evict
+        oldest-first without ever reading as a drop; ack() releases a
+        response eagerly."""
+        srv = ScenarioServer(max_responses=2)
+        ids = [srv.submit(req16(seed=86 + i, rid=f"ret-{i}"))
+               for i in range(3)]
+        srv.drain()
+        acct = srv.accounting()
+        assert acct["responded"] == 3 and acct["dropped"] == 0
+        assert acct["retained"] == 2 and acct["evicted"] == 1
+        assert srv.response(ids[0]) is None          # oldest evicted
+        assert srv.progress(ids[0]) == []            # events went with it
+        assert srv.response(ids[1]).ok
+        acked = srv.ack(ids[1])
+        assert acked is not None and acked.ok
+        assert srv.ack(ids[1]) is None               # already released
+        assert srv.accounting()["retained"] == 1
+        assert srv.accounting()["dropped"] == 0      # acks never drop
+
     def test_duplicate_id_answered_without_clobbering_original(self,
                                                                server):
         r1 = server(req16(seed=51, rid="dup"))
@@ -377,6 +498,10 @@ def test_http_adapter_roundtrip(server):
         assert resp["ok"] and resp["kind"] == "trials"
         assert resp["result"]["n_trials"] == 2
         assert get("/progress?id=http1")["events"]
+        assert get("/accounting")["dropped"] == 0
+        assert post("/ack?id=http1")["ok"]       # released, still a reply
+        with pytest.raises(urllib.error.HTTPError):
+            get("/response?id=http1")            # 404 once acked
         assert get("/accounting")["dropped"] == 0
     finally:
         httpd.shutdown()
